@@ -1,0 +1,26 @@
+"""Batched serving demo: continuous batching over mixed-length requests.
+
+    PYTHONPATH=src python examples/serve_batch.py --arch zamba2-1.2b
+"""
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch.serve import serve_demo
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-1.5b")
+    ap.add_argument("--requests", type=int, default=10)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--max-batch", type=int, default=4)
+    a = ap.parse_args()
+    serve_demo(a.arch, n_requests=a.requests, max_new=a.max_new,
+               max_batch=a.max_batch)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+"""End-to-end training driver with checkpoint/restart fault tolerance.
+
+Default: a ~2M-param smoke model for 300 steps on CPU (fast, loss visibly
+drops).  ``--arch xlstm-125m --full`` trains the real 106M-parameter xLSTM
+if you have the patience (or a TPU).
+
+    PYTHONPATH=src python examples/train_e2e.py [--steps 300]
+
+Kill it mid-run (Ctrl+C is fine, SIGTERM triggers the emergency
+checkpoint) and re-run: it resumes bit-exactly from the latest checkpoint.
+"""
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+from repro.launch.train import train
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-1.5b")
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--full", action="store_true",
+                    help="train the full (non-smoke) config")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_e2e")
+    a = ap.parse_args()
+
+    out = train(a.arch, smoke=not a.full, steps=a.steps, batch=16, seq=128,
+                lr=3e-3, ckpt_dir=a.ckpt_dir, ckpt_every=50,
+                microbatches=2)
+    losses = out["losses"]
+    first, last = np.mean(losses[:10]), np.mean(losses[-10:])
+    print(f"\nloss first10={first:.3f} -> last10={last:.3f} "
+          f"({(1 - last / first):.0%} reduction)")
+    print(f"checkpoints in {a.ckpt_dir}: re-run this script to resume.")
+
+
+if __name__ == "__main__":
+    main()

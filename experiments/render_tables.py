@@ -1,0 +1,59 @@
+"""Render EXPERIMENTS.md tables from the dry-run / roofline JSON records.
+
+    PYTHONPATH=src python experiments/render_tables.py [--which dryrun|roofline|all]
+"""
+import argparse
+import glob
+import json
+import os
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+
+
+def dryrun_table() -> str:
+    rows = []
+    for f in sorted(glob.glob(os.path.join(HERE, "dryrun", "*.json"))):
+        rows.append(json.load(open(f)))
+    rows.sort(key=lambda r: (r["arch"], r["shape"], r["mesh"]))
+    out = ["| arch | shape | mesh | compile(s) | HLO GFLOPs/dev | coll GB/dev "
+           "| temp GB/dev | args GB/dev |",
+           "|---|---|---|---:|---:|---:|---:|---:|"]
+    for r in rows:
+        temp = r.get("temp_size_in_bytes", 0) / 1e9
+        args = r.get("argument_size_in_bytes", 0) / 1e9
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {r['compile_seconds']:.0f} | {r['flops']/1e9:.1f} "
+            f"| {r['collective_bytes']/1e9:.2f} | {temp:.1f} | {args:.2f} |")
+    return "\n".join(out)
+
+
+def roofline_table(subdir: str = "roofline") -> str:
+    rows = []
+    for f in sorted(glob.glob(os.path.join(HERE, subdir, "*.json"))):
+        rows.append(json.load(open(f)))
+    rows.sort(key=lambda r: (r["arch"], r["shape"]))
+    out = ["| arch | shape | t_compute | t_memory | t_collective | dominant "
+           "| useful | roofline frac |",
+           "|---|---|---:|---:|---:|---|---:|---:|"]
+    for r in rows:
+        out.append(
+            f"| {r['arch']} | {r['shape']} "
+            f"| {r['t_compute_s']*1e3:.2f} ms | {r['t_memory_s']*1e3:.2f} ms "
+            f"| {r['t_collective_s']*1e3:.2f} ms | {r['dominant']} "
+            f"| {r['useful_flop_ratio']:.3f} | {r['roofline_fraction']:.4f} |")
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--which", default="all")
+    a = ap.parse_args()
+    if a.which in ("dryrun", "all"):
+        print("## Dry-run\n")
+        print(dryrun_table())
+    if a.which in ("roofline", "all"):
+        print("\n## Roofline (optimized)\n")
+        print(roofline_table("roofline"))
+        print("\n## Roofline (baseline)\n")
+        print(roofline_table("roofline_baseline"))

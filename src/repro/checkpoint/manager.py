@@ -1,0 +1,129 @@
+"""Checkpointing: atomic, keep-N, preemption-safe, elastic-restorable.
+
+Layout::
+
+    <dir>/step_000123/arrays.npz     flattened pytree (path-keyed)
+    <dir>/step_000123/meta.json      step, tree structure, extra state
+    <dir>/step_000123/.complete      commit marker (atomic rename)
+
+Save path: write into ``step_N.tmp`` then ``os.replace`` — a crash mid-save
+never corrupts the latest checkpoint.  Restore loads full (unsharded)
+arrays and re-``device_put``s them under the *current* mesh's shardings, so
+a run may resume on a different topology (elastic restart; DESIGN.md §5 and
+tests/test_fault.py).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import signal
+import threading
+from typing import Any, Callable
+
+import jax
+import numpy as np
+
+
+def _flatten_with_paths(tree) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._preempted = threading.Event()
+
+    # -- save ---------------------------------------------------------------
+    def save(self, step: int, tree: Any, extra: dict | None = None) -> str:
+        name = f"step_{step:08d}"
+        tmp = os.path.join(self.dir, name + ".tmp")
+        final = os.path.join(self.dir, name)
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        flat = _flatten_with_paths(tree)
+        np.savez(os.path.join(tmp, "arrays.npz"), **flat)
+        meta = {"step": step, "extra": extra or {},
+                "treedef": jax.tree_util.tree_structure(tree).serialize_using_proto().hex()
+                if hasattr(jax.tree_util.tree_structure(tree),
+                           "serialize_using_proto") else None}
+        with open(os.path.join(tmp, "meta.json"), "w") as f:
+            json.dump(meta, f)
+        open(os.path.join(tmp, ".complete"), "w").close()
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.replace(tmp, final)
+        self._gc()
+        return final
+
+    def _gc(self) -> None:
+        steps = self.all_steps()
+        for s in steps[:-self.keep] if self.keep > 0 else []:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:08d}"),
+                          ignore_errors=True)
+
+    # -- restore --------------------------------------------------------------
+    def all_steps(self) -> list[int]:
+        out = []
+        for d in sorted(os.listdir(self.dir)):
+            if d.startswith("step_") and not d.endswith(".tmp") and \
+                    os.path.exists(os.path.join(self.dir, d, ".complete")):
+                out.append(int(d.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> int | None:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, step: int, like: Any, shardings: Any = None
+                ) -> tuple[Any, dict]:
+        """Restore into the structure of ``like``; re-shard under
+        ``shardings`` (same structure) when given — this is what makes the
+        checkpoint elastic across mesh shapes."""
+        path = os.path.join(self.dir, f"step_{step:08d}")
+        data = np.load(os.path.join(path, "arrays.npz"))
+        with open(os.path.join(path, "meta.json")) as f:
+            meta = json.load(f)
+        paths, treedef = jax.tree_util.tree_flatten_with_path(like)
+        leaves = []
+        for p, leaf in paths:
+            key = "/".join(str(getattr(q, "key", getattr(q, "idx", q)))
+                           for q in p)
+            arr = data[key]
+            assert arr.shape == tuple(leaf.shape), (key, arr.shape, leaf.shape)
+            leaves.append(arr)
+        tree = jax.tree_util.tree_unflatten(treedef, leaves)
+        if shardings is not None:
+            tree = jax.tree.map(
+                lambda x, s: jax.device_put(x, s), tree, shardings)
+        return tree, meta["extra"]
+
+    def restore_latest(self, like: Any, shardings: Any = None):
+        step = self.latest_step()
+        if step is None:
+            return None, None, None
+        tree, extra = self.restore(step, like, shardings)
+        return step, tree, extra
+
+    # -- preemption -------------------------------------------------------------
+    def install_preemption_handler(self) -> None:
+        """SIGTERM -> set the preempted flag; the train loop checks it each
+        step and performs an emergency save + clean exit."""
+        def handler(signum, frame):
+            self._preempted.set()
+        signal.signal(signal.SIGTERM, handler)
+
+    @property
+    def preempted(self) -> bool:
+        return self._preempted.is_set()
+
+    def simulate_preemption(self) -> None:   # for tests
+        self._preempted.set()

@@ -1,0 +1,34 @@
+"""The paper's primary contribution: an analytical performance simulator for
+blocked GEMM (GotoBLAS/BLIS family), plus its TPU adaptation (TileTuner) and
+the roofline machinery built on it.
+
+Public surface:
+  hardware   — machine specs (GAP8_FC calibration Table 1, TPU_V5E roofline)
+  variants   — B3A2C0 / C3B2A0 / B3C2A0 loop nests + blocking derivation
+  simulator  — the faithful cost model (paper §3) and Table-2 search
+  tpu_model  — Pallas-grid cost model (HBM/VMEM/MXU, ±overlap)
+  autotune   — TileTuner: analytical BlockSpec selection + manifest
+  roofline   — 3-term roofline from compiled HLO
+  calibrate  — the paper's calibration methodology, runnable on any host
+"""
+from repro.core.hardware import GAP8_FC, TPU_V5E, MachineSpec, get_machine
+from repro.core.simulator import CostBreakdown, best_microkernel, simulate
+from repro.core.tpu_model import GemmShape, GridOrder, TileConfig, estimate
+from repro.core.autotune import Manifest, TileDecision, tune
+from repro.core.variants import (
+    Blocking,
+    MicroKernel,
+    Problem,
+    Variant,
+    derive_blocking,
+    feasible_microkernels,
+)
+
+__all__ = [
+    "GAP8_FC", "TPU_V5E", "MachineSpec", "get_machine",
+    "CostBreakdown", "best_microkernel", "simulate",
+    "GemmShape", "GridOrder", "TileConfig", "estimate",
+    "Manifest", "TileDecision", "tune",
+    "Blocking", "MicroKernel", "Problem", "Variant",
+    "derive_blocking", "feasible_microkernels",
+]

@@ -1,0 +1,172 @@
+"""TileTuner — the paper's design-space exploration as a framework service.
+
+The paper's stated goal is to *experiment with algorithmic alternatives prior
+to implementing them* (§1, §4).  TileTuner does exactly that for every
+GEMM-shaped operation in the framework: given a :class:`GemmShape` it ranks
+Pallas ``(bm, bn, bk, grid-order)`` candidates with the analytical TPU model
+(``core.tpu_model``) and returns the winner; decisions are memoised in a
+JSON manifest so kernels, benchmarks and the perf log all agree on the tiles
+used.
+
+For the GAP8 instance the equivalent entry point is
+:func:`repro.core.simulator.best_microkernel` (Table 2's procedure).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import json
+import math
+import os
+from typing import Iterable, Sequence
+
+from repro.core.hardware import MachineSpec, TPU_V5E, V5E_VMEM_BYTES
+from repro.core.tpu_model import (
+    DTYPE_BYTES,
+    GemmShape,
+    GridOrder,
+    TileConfig,
+    TpuCost,
+    estimate,
+    vmem_required,
+)
+
+# Candidate block dims: MXU-aligned multiples of 128 plus small sublane
+# multiples for skinny shapes.
+_CAND_MN = (8, 16, 32, 64, 128, 256, 512, 1024, 2048)
+_CAND_K = (128, 256, 512, 1024, 2048)
+# Fraction of VMEM the kernel may claim (leave headroom for Mosaic spills,
+# semaphores and the scalar prefetch working set).
+VMEM_BUDGET_FRACTION = 0.75
+
+
+def candidate_tiles(
+    shape: GemmShape,
+    orders: Sequence[GridOrder] = (GridOrder.K_INNER, GridOrder.K_OUTER),
+    vmem_bytes: int = int(V5E_VMEM_BYTES),
+) -> list[TileConfig]:
+    budget = int(vmem_bytes * VMEM_BUDGET_FRACTION)
+    out = []
+    for bm in _CAND_MN:
+        if bm > shape.m and bm > 8:
+            # allow one size past the dim for padding, then stop
+            if bm // 2 >= shape.m:
+                continue
+        for bn in _CAND_MN:
+            if bn > shape.n and bn > 128 and bn // 2 >= shape.n:
+                continue
+            for bk in _CAND_K:
+                if bk > shape.k and bk > 128 and bk // 2 >= shape.k:
+                    continue
+                for order in orders:
+                    t = TileConfig(bm, bn, bk, order)
+                    if vmem_required(shape, t) <= budget:
+                        out.append(t)
+    return out
+
+
+@dataclasses.dataclass(frozen=True)
+class TileDecision:
+    shape: GemmShape
+    tile: TileConfig
+    cost: TpuCost
+    overlap: bool
+
+    @property
+    def seconds(self) -> float:
+        return self.cost.total(self.overlap)
+
+    def to_json(self) -> dict:
+        return {
+            "m": self.shape.m, "n": self.shape.n, "k": self.shape.k,
+            "dtype": self.shape.dtype,
+            "bm": self.tile.bm, "bn": self.tile.bn, "bk": self.tile.bk,
+            "order": self.tile.order.value,
+            "seconds": self.seconds,
+            "roofline_fraction": self.cost.roofline_fraction(self.overlap),
+            "hbm_bytes": self.cost.hbm_bytes,
+            "vmem_peak": self.cost.vmem_peak,
+        }
+
+
+@functools.lru_cache(maxsize=4096)
+def _tune_cached(m: int, n: int, k: int, dtype: str, accumulate: bool,
+                 overlap: bool) -> TileDecision:
+    shape = GemmShape(m=m, n=n, k=k, dtype=dtype, accumulate=accumulate)
+    best: TileDecision | None = None
+    for t in candidate_tiles(shape):
+        c = estimate(shape, t)
+        d = TileDecision(shape=shape, tile=t, cost=c, overlap=overlap)
+        if best is None or d.seconds < best.seconds:
+            best = d
+    if best is None:  # degenerate tiny shape: single-block fallback
+        t = TileConfig(8, 128, 128, GridOrder.K_INNER)
+        best = TileDecision(shape, t, estimate(shape, t), overlap)
+    return best
+
+
+def tune(shape: GemmShape, overlap: bool = True) -> TileDecision:
+    """Pick the best (bm, bn, bk, order) for one GEMM shape."""
+    return _tune_cached(shape.m, shape.n, shape.k, shape.dtype,
+                        shape.accumulate, overlap)
+
+
+def tune_many(shapes: Iterable[GemmShape], overlap: bool = True
+              ) -> list[TileDecision]:
+    return [tune(s, overlap) for s in shapes]
+
+
+class Manifest:
+    """Persisted tile decisions, keyed by (m, n, k, dtype)."""
+
+    def __init__(self, path: str):
+        self.path = path
+        self._entries: dict[str, dict] = {}
+        if os.path.exists(path):
+            with open(path) as f:
+                self._entries = json.load(f)
+
+    @staticmethod
+    def key(shape: GemmShape) -> str:
+        return f"{shape.m}x{shape.n}x{shape.k}:{shape.dtype}"
+
+    def lookup(self, shape: GemmShape) -> TileConfig | None:
+        e = self._entries.get(self.key(shape))
+        if e is None:
+            return None
+        return TileConfig(e["bm"], e["bn"], e["bk"], GridOrder(e["order"]))
+
+    def record(self, decision: TileDecision) -> None:
+        self._entries[self.key(decision.shape)] = decision.to_json()
+
+    def save(self) -> None:
+        tmp = self.path + ".tmp"
+        os.makedirs(os.path.dirname(self.path) or ".", exist_ok=True)
+        with open(tmp, "w") as f:
+            json.dump(self._entries, f, indent=1, sort_keys=True)
+        os.replace(tmp, self.path)
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+
+def model_gemm_shapes(cfg) -> list[GemmShape]:
+    """Enumerate the GEMM shapes of one transformer architecture config —
+    the per-arch workload TileTuner optimises (the MobileNetV1-Table-2
+    analogue for our assigned architectures)."""
+    d = cfg.d_model
+    shapes = []
+    tokens = 4096  # per-chip token tile; a representative M
+    q = cfg.n_heads * cfg.head_dim
+    kv = cfg.n_kv_heads * cfg.head_dim
+    shapes.append(GemmShape(tokens, q + 2 * kv, d, dtype="bf16"))   # QKV
+    shapes.append(GemmShape(tokens, d, q, dtype="bf16"))            # O proj
+    if cfg.d_ff:
+        shapes.append(GemmShape(tokens, 2 * cfg.d_ff, d, dtype="bf16"))  # gate+up
+        shapes.append(GemmShape(tokens, d, cfg.d_ff, dtype="bf16"))      # down
+    if getattr(cfg, "n_experts", 0):
+        per_e = max(1, tokens * cfg.experts_per_token // cfg.n_experts)
+        shapes.append(GemmShape(per_e, 2 * cfg.moe_d_ff, d, dtype="bf16"))
+        shapes.append(GemmShape(per_e, d, cfg.moe_d_ff, dtype="bf16"))
+    shapes.append(GemmShape(tokens, cfg.vocab_size, d, dtype="bf16"))    # logits
+    return shapes

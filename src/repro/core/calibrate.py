@@ -1,0 +1,92 @@
+"""Calibration harness (paper §3.2).
+
+The paper calibrates its simulator with a handful of micro-experiments:
+packing rates at a reference chunk size (r = 4), straight panel-copy rates,
+micro-kernel streaming rates, and one arithmetic-rate measurement.  The GAP8
+numbers are published (Table 1) and encoded in ``hardware.GAP8_FC``; this
+module re-runs the *methodology* on the host we are on, producing a
+``MachineSpec`` for it — demonstrating the portability claim (§1: "a few
+experimental data ... collected via simple calibration experiments").
+
+On the CPU container this yields a host-CPU spec (useful for the unit tests
+that check chunk-rate linearity); on a real TPU the same harness would time
+HBM<->VMEM DMAs via Pallas kernels.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.hardware import MachineSpec
+
+
+def _time(fn, *args, reps: int = 5) -> float:
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn(*args)
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def measure_copy_rate(nbytes: int = 1 << 24) -> float:
+    """Contiguous copy bandwidth (bytes/s) — the analogue of T_{M,L1}."""
+    src = np.ones(nbytes, dtype=np.uint8)
+    dst = np.empty_like(src)
+    t = _time(lambda: np.copyto(dst, src))
+    return nbytes / t
+
+
+def measure_packing_rate(chunk: int, rows: int = 4096, cols: int = 4096
+                         ) -> float:
+    """Strided packing bandwidth (bytes/s) for a given contiguous-chunk size.
+
+    Mirrors the paper's packing experiment: reorganise a matrix into
+    micro-panels of ``chunk`` leading elements.  The paper observed the rate
+    scaling linearly with the chunk size; ``tests/test_calibrate.py`` checks
+    the same trend holds for the host.
+    """
+    a = np.arange(rows * cols, dtype=np.uint8).reshape(rows, cols)
+    panels = cols // chunk
+
+    def pack():
+        # (rows, panels, chunk) -> (panels, rows, chunk): same data movement
+        # pattern as Fig. 2 (chunks of `chunk` consecutive elements).
+        return np.ascontiguousarray(
+            a.reshape(rows, panels, chunk).transpose(1, 0, 2))
+
+    t = _time(pack)
+    return a.nbytes / t
+
+
+def measure_arith_rate(n: int = 1024) -> float:
+    """Matmul throughput (ops/s) — the analogue of the 5.64 INT8 GOPS
+    micro-kernel experiment."""
+    a = np.random.rand(n, n).astype(np.float32)
+    b = np.random.rand(n, n).astype(np.float32)
+    t = _time(lambda: a @ b)
+    return 2.0 * n ** 3 / t
+
+
+def calibrate_host(name: str = "host-cpu") -> MachineSpec:
+    """Run the full calibration suite and assemble a MachineSpec."""
+    pack4 = measure_packing_rate(4)
+    copy = measure_copy_rate()
+    arith = measure_arith_rate()
+    return MachineSpec(
+        name=name,
+        capacities={"M": 1 << 34, "L2": 1 << 21, "L1": 1 << 15, "R": 1 << 10},
+        transfer_rates={
+            ("M", "M"): pack4,
+            ("M", "L2"): pack4,
+            ("L2", "M"): pack4,
+            ("M", "L1"): copy,
+            ("M", "R"): copy,
+            ("L1", "R"): copy * 4,
+            ("L2", "R"): copy * 2,
+        },
+        arith_rate={"int8": arith, "f32": arith},
+        reference_chunk=4,
+        elem_bytes=1,
+    )

@@ -1,0 +1,129 @@
+"""The paper's performance simulator (§3): traffic terms x calibrated rates.
+
+``simulate`` produces a :class:`CostBreakdown` whose components mirror the
+stacked bars of Figs. 4-5: packing, unpacking, L1 copies, per-level
+micro-kernel streaming, and arithmetic.  The basic model assumes *no overlap*
+between data transfers and compute (paper §3.1), so the total is the plain
+sum of all components; the arithmetic rate is independent of the micro-kernel
+shape (paper §4, a stated simplification of the basic simulator).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping
+
+from repro.core.hardware import MachineSpec
+from repro.core.variants import (
+    Blocking,
+    MicroKernel,
+    Problem,
+    TrafficTerm,
+    Variant,
+    derive_blocking,
+    traffic_terms,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class CostBreakdown:
+    """Execution-time decomposition (seconds) of one GEMM."""
+
+    variant: Variant
+    micro_kernel: MicroKernel
+    blocking: Blocking
+    problem: Problem
+    # name -> seconds for every traffic term, plus "arith".
+    components: Mapping[str, float]
+    # name -> bytes moved, for roofline-style reporting.
+    traffic_bytes: Mapping[str, float]
+    # name -> origin memory level (for grouping like the paper's figures).
+    origins: Mapping[str, str]
+
+    @property
+    def total(self) -> float:
+        return float(sum(self.components.values()))
+
+    @property
+    def arith(self) -> float:
+        return self.components["arith"]
+
+    @property
+    def transfer(self) -> float:
+        return self.total - self.arith
+
+    def grouped(self) -> dict[str, float]:
+        """Group components the way the paper's figures do."""
+        g = {"packing": 0.0, "unpacking": 0.0, "copy": 0.0,
+             "stream_M": 0.0, "stream_L1": 0.0, "stream_L2": 0.0, "arith": 0.0}
+        for name, secs in self.components.items():
+            if name.startswith("pack"):
+                g["packing"] += secs
+            elif name.startswith("unpack"):
+                g["unpacking"] += secs
+            elif name.startswith("copy"):
+                g["copy"] += secs
+            elif name == "arith":
+                g["arith"] += secs
+            else:  # stream_X
+                g[f"stream_{self.origins[name]}"] += secs
+        return g
+
+
+def simulate(
+    machine: MachineSpec,
+    variant: Variant,
+    mk: MicroKernel,
+    prob: Problem,
+    blocking: Blocking | None = None,
+    policy: str = "analytic",
+) -> CostBreakdown:
+    """Estimate the execution time of ``C += A.B`` on ``machine``.
+
+    ``policy`` selects the partial-tile accounting: "analytic" uses exact
+    byte ratios (closed-form; the paper's 2%-accurate regime), "padded"
+    charges edge tiles at full-tile cost (a real implementation's upper
+    bound).  EXPERIMENTS.md reports Table-2 agreement for both.
+    """
+    blk = blocking or derive_blocking(variant, mk, machine, prob)
+    terms = traffic_terms(variant, mk, blk, prob, policy=policy)
+
+    components: dict[str, float] = {}
+    traffic: dict[str, float] = {}
+    origins: dict[str, str] = {}
+    for t in terms:
+        if t.chunk is None:
+            rate = machine.rate(t.origin, t.dest)
+        else:
+            rate = machine.packing_rate(t.origin, t.dest, t.chunk)
+        components[t.name] = t.bytes / rate
+        traffic[t.name] = t.bytes
+        origins[t.name] = t.origin
+
+    arith_rate = machine.arith_rate[prob.dtype]
+    components["arith"] = prob.flops / arith_rate
+
+    return CostBreakdown(
+        variant=variant, micro_kernel=mk, blocking=blk, problem=prob,
+        components=components, traffic_bytes=traffic, origins=origins,
+    )
+
+
+def best_microkernel(
+    machine: MachineSpec,
+    variant: Variant,
+    prob: Problem,
+    candidates: list[MicroKernel] | None = None,
+    policy: str = "analytic",
+) -> CostBreakdown:
+    """Exhaustive search over the register-feasible micro-kernel set —
+    the paper's Table-2 procedure."""
+    from repro.core.variants import feasible_microkernels
+
+    cands = candidates or feasible_microkernels(machine, variant)
+    best: CostBreakdown | None = None
+    for mk in cands:
+        cb = simulate(machine, variant, mk, prob, policy=policy)
+        if best is None or cb.total < best.total:
+            best = cb
+    assert best is not None, "no feasible micro-kernel"
+    return best

@@ -1,0 +1,3 @@
+from repro.data.synthetic import DataIterator, make_batch
+
+__all__ = ["DataIterator", "make_batch"]

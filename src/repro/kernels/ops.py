@@ -1,0 +1,84 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+``matmul`` / ``grouped_gemm`` / ``flash_attention`` dispatch on backend:
+
+* on TPU (``jax.default_backend() == 'tpu'``) or with ``interpret=True``
+  they run the Pallas kernels with tiles chosen by TileTuner — the paper's
+  analytical selection applied at call time;
+* otherwise (CPU container, 512-device dry-run) they fall back to the
+  pure-jnp reference path so XLA-native SPMD lowering stays clean
+  (DESIGN.md §3).
+
+Padding to tile multiples happens here (zero K-padding is mathematically
+exact; M/N padding is sliced off).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.autotune import tune
+from repro.core.tpu_model import GemmShape, GridOrder, TileConfig
+from repro.kernels import gemm as gemm_kernel
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention_fwd
+from repro.kernels.grouped_gemm import grouped_gemm_kernel
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_to(x, mults):
+    pads = [(0, (m - d % m) % m) for d, m in zip(x.shape, mults)]
+    if any(p[1] for p in pads):
+        return jnp.pad(x, pads), True
+    return x, False
+
+
+def pick_tile(m: int, n: int, k: int, dtype: str,
+              order: GridOrder | None = None) -> TileConfig:
+    """TileTuner decision for a GEMM shape (cached)."""
+    d = tune(GemmShape(m, n, k, dtype))
+    t = d.tile
+    if order is not None and t.order is not order:
+        t = TileConfig(t.bm, t.bn, t.bk, order)
+    return t
+
+
+def matmul(a, b, *, tile: TileConfig | None = None,
+           interpret: bool = False, force_pallas: bool = False):
+    """C = A @ B through the tuned Pallas kernel (TPU) or jnp (elsewhere)."""
+    m, k = a.shape
+    n = b.shape[1]
+    if not (_on_tpu() or interpret or force_pallas):
+        return ref.gemm_ref(a, b)
+    dtype = {jnp.dtype(jnp.bfloat16): "bf16", jnp.dtype(jnp.float32): "f32",
+             jnp.dtype(jnp.int8): "int8"}.get(jnp.dtype(a.dtype), "bf16")
+    t = tile or pick_tile(m, n, k, dtype)
+    bm, bn, bk = min(t.bm, m), min(t.bn, n), min(t.bk, k)
+    ap, _ = _pad_to(a, (bm, bk))
+    bp, _ = _pad_to(b, (bk, bn))
+    out = gemm_kernel.gemm(ap, bp, tile=TileConfig(bm, bn, bk, t.order),
+                           interpret=interpret)
+    return out[:m, :n]
+
+
+def grouped_gemm(x, w, *, block_c: int = 128, block_f: int = 128,
+                 interpret: bool = False):
+    """x: (E, C, D) @ w: (E, D, F) -> (E, C, F) (MoE expert FFN)."""
+    if not (_on_tpu() or interpret):
+        return ref.grouped_gemm_ref(x, w)
+    return grouped_gemm_kernel(x, w, block_c=block_c, block_f=block_f,
+                               interpret=interpret)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 128,
+                    block_k: int = 128, interpret: bool = False):
+    """q,k,v: (B, S, H, D) -> (B, S, H, D)."""
+    if not (_on_tpu() or interpret):
+        return ref.flash_attention_ref(q, k, v, causal=causal)
+    return flash_attention_fwd(q, k, v, causal=causal, block_q=block_q,
+                               block_k=block_k, interpret=interpret)

@@ -1,0 +1,228 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# NOTE: the two lines above MUST precede every other import (including
+# ``from repro...``) — jax locks the device count on first init.
+
+# Multi-pod dry-run docstring follows (kept as module comment because the
+# XLA_FLAGS lines must be the first statements).
+_DOC = """Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell we build the jitted step (train / prefill / decode) with full
+in/out shardings, ``.lower()`` it against ShapeDtypeStruct inputs, and
+``.compile()`` on the 512-placeholder-device CPU backend — proving the
+distribution config is coherent (sharding divisibility, collective layouts,
+SPMD partitioning) without hardware.  ``memory_analysis`` and
+``cost_analysis`` plus the HLO collective bytes feed EXPERIMENTS.md
+§Dry-run / §Roofline.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen2-7b --shape train_4k --mesh pod
+  python -m repro.launch.dryrun --all [--mesh both] [--out experiments/dryrun]
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import (
+    ARCH_IDS,
+    SUBQUADRATIC,
+    get_config,
+    input_specs,
+    shape_cells,
+    skipped_cells,
+)
+from repro.configs.base import SHAPES, TrainConfig
+from repro.core.roofline import collective_bytes
+from repro.launch.mesh import make_production_mesh
+from repro.models.model import LM
+from repro.runtime.serve_lib import (
+    abstract_cache,
+    make_decode_step,
+    serve_plan,
+)
+from repro.runtime.sharding import (
+    batch_specs,
+    default_parallel,
+    mesh_info,
+    shardings_for,
+)
+from repro.runtime.train_lib import abstract_train_state, make_train_step
+
+
+def _sds_with_sharding(tree_sds, tree_spec, mesh):
+    return jax.tree.map(
+        lambda s, sp: jax.ShapeDtypeStruct(s.shape, s.dtype,
+                                           sharding=NamedSharding(mesh, sp)),
+        tree_sds, tree_spec)
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             donate: bool = True, cfg=None, unroll: bool = False,
+             pcfg=None) -> dict:
+    """Lower + compile one cell; returns the record for EXPERIMENTS.md.
+
+    ``cfg``/``unroll``/``pcfg`` overrides serve the roofline probes
+    (launch/roofline_probe.py)."""
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    cfg = cfg or get_config(arch)
+    shape = SHAPES[shape_name]
+    pcfg = pcfg or default_parallel(arch)
+    minfo = mesh_info(mesh, fsdp=pcfg.fsdp)
+    lm = LM(cfg, minfo, unroll=unroll)
+    tcfg = TrainConfig()
+    key = jax.random.key(0)
+    t0 = time.time()
+
+    with jax.set_mesh(mesh):
+        if shape.kind == "train":
+            params, pspecs, opt, ospecs = abstract_train_state(lm, tcfg, key)
+            bspecs = batch_specs(cfg, shape, minfo)
+            batch_sds = {
+                k: jax.ShapeDtypeStruct(v.shape, v.dtype,
+                                        sharding=NamedSharding(mesh, bspecs[k]))
+                for k, v in input_specs(cfg, shape).items()}
+            params_sds = _sds_with_sharding(params, pspecs, mesh)
+            opt_sds = _sds_with_sharding(opt, ospecs, mesh)
+            step_fn = make_train_step(lm, tcfg, pcfg)
+            jitted = jax.jit(
+                step_fn,
+                in_shardings=(shardings_for(mesh, pspecs),
+                              shardings_for(mesh, ospecs),
+                              shardings_for(mesh, bspecs)),
+                donate_argnums=(0, 1) if donate else (),
+            )
+            lowered = jitted.lower(params_sds, opt_sds, batch_sds)
+        elif shape.kind == "prefill":
+            params, pspecs, _, _ = abstract_train_state(lm, tcfg, key)
+            bspecs = batch_specs(cfg, shape, minfo)
+            batch_sds = {
+                k: jax.ShapeDtypeStruct(v.shape, v.dtype,
+                                        sharding=NamedSharding(mesh, bspecs[k]))
+                for k, v in input_specs(cfg, shape).items()}
+            params_sds = _sds_with_sharding(params, pspecs, mesh)
+            jitted = jax.jit(lm.prefill,
+                             in_shardings=(shardings_for(mesh, pspecs),
+                                           shardings_for(mesh, bspecs)))
+            lowered = jitted.lower(params_sds, batch_sds)
+        else:  # decode
+            params, pspecs, _, _ = abstract_train_state(lm, tcfg, key)
+            plan = serve_plan(cfg, shape, minfo)
+            caches, cspecs = abstract_cache(
+                lm, shape.global_batch, shape.seq_len,
+                seq_shard=plan["seq_shard"] and pcfg.seq_shard_long_kv,
+                batch_shard=plan["batch_shard"])
+            bspecs = batch_specs(cfg, shape, minfo)
+            ins = input_specs(cfg, shape)
+            batch_sds = {
+                k: jax.ShapeDtypeStruct(v.shape, v.dtype,
+                                        sharding=NamedSharding(mesh, bspecs[k]))
+                for k, v in ins.items()}
+            params_sds = _sds_with_sharding(params, pspecs, mesh)
+            cache_sds = _sds_with_sharding(caches, cspecs, mesh)
+            step_fn = make_decode_step(lm)
+            jitted = jax.jit(
+                step_fn,
+                in_shardings=(shardings_for(mesh, pspecs),
+                              shardings_for(mesh, cspecs),
+                              NamedSharding(mesh, bspecs["token"]),
+                              NamedSharding(mesh, P())),
+                donate_argnums=(1,) if donate else (),
+            )
+            lowered = jitted.lower(params_sds, cache_sds,
+                                   batch_sds["token"],
+                                   jax.ShapeDtypeStruct((), jnp.int32))
+
+        compiled = lowered.compile()
+
+    cost = compiled.cost_analysis() or {}
+    mem = compiled.memory_analysis()
+    hlo = compiled.as_text()
+    coll = collective_bytes(hlo)
+    record = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": 512 if multi_pod else 256,
+        "ok": True,
+        "compile_seconds": round(time.time() - t0, 1),
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes_accessed": float(cost.get("bytes accessed", 0.0)),
+        "collective_bytes": coll["_total"],
+        "collective_count": coll["_count"],
+        "collective_detail": {k: v for k, v in coll.items()
+                              if not k.startswith("_") and v},
+        "model_params": cfg.param_count(),
+        "active_params": cfg.active_param_count(),
+        "n_layers": cfg.n_layers,
+        "unrolled": unroll,
+        "fsdp": pcfg.fsdp,
+    }
+    if mem is not None:
+        for attr in ("temp_size_in_bytes", "argument_size_in_bytes",
+                     "output_size_in_bytes", "generated_code_size_in_bytes"):
+            v = getattr(mem, attr, None)
+            if v is not None:
+                record[attr] = int(v)
+    return record
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--mesh", choices=["pod", "multipod", "both"],
+                    default="both")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--force", action="store_true",
+                    help="recompute cached cells")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    meshes = {"pod": [False], "multipod": [True], "both": [False, True]}[args.mesh]
+
+    if args.all:
+        cells = [(a, s.name) for a in ARCH_IDS for s in shape_cells(a)]
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape)]
+
+    failures = []
+    for arch, shape_name in cells:
+        if shape_name in skipped_cells(arch):
+            print(f"SKIP {arch} x {shape_name} (full attention; DESIGN.md §8)")
+            continue
+        for multi_pod in meshes:
+            tag = f"{arch}__{shape_name}__{'multipod' if multi_pod else 'pod'}"
+            path = os.path.join(args.out, tag + ".json")
+            if os.path.exists(path) and not args.force:
+                print(f"CACHED {tag}")
+                continue
+            print(f"RUN {tag} ...", flush=True)
+            try:
+                rec = run_cell(arch, shape_name, multi_pod)
+                with open(path, "w") as f:
+                    json.dump(rec, f, indent=1)
+                print(f"  OK flops={rec['flops']:.3e} "
+                      f"coll={rec['collective_bytes']/1e9:.2f}GB "
+                      f"({rec['compile_seconds']}s)")
+            except Exception as e:  # noqa: BLE001 — record and continue
+                failures.append((tag, repr(e)))
+                print(f"  FAIL {tag}: {e}")
+                traceback.print_exc()
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for t, e in failures:
+            print(" ", t, e)
+        raise SystemExit(1)
+    print("\nall requested cells compiled OK")
+
+
+if __name__ == "__main__":
+    main()

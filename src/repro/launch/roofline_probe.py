@@ -1,0 +1,142 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+# Roofline probes: exact HLO cost extrapolation around XLA's while-loop
+# accounting.
+#
+# ``compiled.cost_analysis()`` counts a scan body ONCE regardless of trip
+# count, so the scanned full model under-reports.  Each cell therefore
+# compiles two *unrolled* probe models — 1 period and 2 periods of the layer
+# pattern (tail attached to both, so it cancels), with ``attn_chunk = S`` so
+# the attention KV scan has trip count 1 — and extrapolates exactly:
+#
+#     F_cell = F(1) + (k_full - 1) * (F(2) - F(1))
+#
+# Per-period costs are identical by construction (same shapes per period),
+# so the extrapolation is exact for FLOPs, bytes and collective bytes; the
+# only residual undercount is sLSTM's time-step scan (~2% of that block's
+# FLOPs, noted in EXPERIMENTS.md).  Memory figures come from the *scanned*
+# production compile (launch/dryrun.py), which is what would execute.
+import argparse
+import dataclasses
+import json
+
+from repro.configs import ARCH_IDS, get_config, shape_cells, skipped_cells
+from repro.configs.base import SHAPES
+from repro.core.hardware import V5E_HBM_BW, V5E_ICI_BW, V5E_PEAK_BF16
+from repro.launch.dryrun import run_cell
+from repro.models.model import factor_pattern
+
+
+def probe_config(cfg, n_periods: int, seq_len: int):
+    period, k, tail = factor_pattern(cfg.block_pattern)
+    pattern = tuple(period) * n_periods + tuple(tail)
+    return dataclasses.replace(
+        cfg, n_layers=len(pattern), block_pattern=pattern,
+        attn_chunk=max(seq_len, cfg.attn_chunk))
+
+
+def model_flops(cfg, shape) -> float:
+    """MODEL_FLOPS = 6 N D (train) / 2 N_active per generated token (decode),
+    N = active params."""
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        return 6.0 * n_active * shape.tokens
+    if shape.kind == "prefill":
+        return 2.0 * n_active * shape.tokens
+    return 2.0 * n_active * shape.global_batch      # one token per sequence
+
+
+def probe_cell(arch: str, shape_name: str, multi_pod: bool = False) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    period, k_full, tail = factor_pattern(cfg.block_pattern)
+
+    f1 = run_cell(arch, shape_name, multi_pod,
+                  cfg=probe_config(cfg, 1, shape.seq_len), unroll=True,
+                  donate=False)
+    f2 = run_cell(arch, shape_name, multi_pod,
+                  cfg=probe_config(cfg, 2, shape.seq_len), unroll=True,
+                  donate=False)
+
+    def extrap(key):
+        d = f2[key] - f1[key]
+        return f1[key] + (k_full - 1) * d
+
+    chips = f1["chips"]
+    # cost_analysis is PER-DEVICE on SPMD modules (core/roofline.py): terms
+    # divide by per-chip rates directly.
+    flops = extrap("flops")
+    nbytes = extrap("bytes_accessed")
+    coll = extrap("collective_bytes")
+    mf = model_flops(cfg, shape)
+    t_comp = flops / V5E_PEAK_BF16
+    t_mem = nbytes / V5E_HBM_BW
+    t_coll = coll / V5E_ICI_BW
+    terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    step = max(terms.values())
+    ideal = mf / (chips * V5E_PEAK_BF16)
+    return {
+        "arch": arch, "shape": shape_name,
+        "mesh": f2["mesh"], "chips": chips,
+        "hlo_flops": flops, "hlo_bytes": nbytes, "collective_bytes": coll,
+        "per_period_flops": f2["flops"] - f1["flops"],
+        "n_periods": k_full,
+        "model_flops": mf,
+        "useful_flop_ratio": mf / (flops * chips) if flops else 0.0,
+        "t_compute_s": t_comp, "t_memory_s": t_mem, "t_collective_s": t_coll,
+        "dominant": dominant,
+        "step_time_bound_s": step,
+        "roofline_fraction": ideal / step if step else 0.0,
+        "probe_compile_s": f1["compile_seconds"] + f2["compile_seconds"],
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multipod", action="store_true",
+                    help="probe the 512-chip mesh (default: single pod)")
+    ap.add_argument("--out", default="experiments/roofline")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    if args.all:
+        cells = [(a, s.name) for a in ARCH_IDS for s in shape_cells(a)]
+    else:
+        assert args.arch and args.shape
+        cells = [(args.arch, args.shape)]
+
+    failures = []
+    for arch, shape_name in cells:
+        if shape_name in skipped_cells(arch):
+            continue
+        tag = f"{arch}__{shape_name}"
+        path = os.path.join(args.out, tag + ".json")
+        if os.path.exists(path) and not args.force:
+            print(f"CACHED {tag}")
+            continue
+        print(f"PROBE {tag} ...", flush=True)
+        try:
+            rec = probe_cell(arch, shape_name, args.multipod)
+            with open(path, "w") as f:
+                json.dump(rec, f, indent=1)
+            print(f"  {rec['dominant']:<10} comp={rec['t_compute_s']*1e3:.2f}ms "
+                  f"mem={rec['t_memory_s']*1e3:.2f}ms "
+                  f"coll={rec['t_collective_s']*1e3:.2f}ms "
+                  f"rf={rec['roofline_fraction']:.3f}")
+        except Exception as e:  # noqa: BLE001
+            failures.append((tag, repr(e)))
+            print(f"  FAIL {tag}: {e}")
+    if failures:
+        for t, e in failures:
+            print("FAILED:", t, e)
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,137 @@
+"""Parameter-pytree plumbing shared by all model code.
+
+Models are pure-JAX: ``init_*`` functions build nested dicts whose leaves are
+:class:`Param` — an array *plus* its logical PartitionSpec — and ``apply_*``
+functions consume plain value trees.  ``split_params`` separates the two so
+``jax.jit`` sees arrays while the launcher sees shardings of identical tree
+structure (the property tests assert this invariant).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+@dataclasses.dataclass
+class Param:
+    value: Any                 # jax.Array | ShapeDtypeStruct
+    spec: P
+
+
+def _param_flatten(p: Param):
+    return (p.value,), p.spec
+
+
+def _param_unflatten(spec, children):
+    return Param(children[0], spec)
+
+
+# Registered as a pytree with the spec as static aux data: jax.eval_shape
+# over an init function then yields abstract values *and* concrete specs —
+# exactly what the 512-device dry-run needs (no allocation).
+jax.tree_util.register_pytree_node(Param, _param_flatten, _param_unflatten)
+
+
+def is_param(x) -> bool:
+    return isinstance(x, Param)
+
+
+def split_params(tree):
+    """(Param tree) -> (value tree, spec tree) with identical structure."""
+    values = jax.tree.map(lambda p: p.value, tree, is_leaf=is_param)
+    specs = jax.tree.map(lambda p: p.spec, tree, is_leaf=is_param)
+    return values, specs
+
+
+def merge_params(values, specs):
+    return jax.tree.map(Param, values, specs)
+
+
+def param_count(values) -> int:
+    return sum(x.size for x in jax.tree.leaves(values))
+
+
+def param_bytes(values) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(values))
+
+
+# ---------------------------------------------------------------------------
+# Initialisers.  All take an explicit PRNG key and return Param leaves.
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, d_in: int, shape: tuple, spec: P, dtype) -> Param:
+    """Fan-in-scaled normal init (the shape's contraction dim is d_in)."""
+    std = d_in ** -0.5
+    v = (jax.random.normal(key, shape, dtype=jnp.float32) * std).astype(dtype)
+    return Param(v, spec)
+
+
+def zeros_init(shape: tuple, spec: P, dtype) -> Param:
+    return Param(jnp.zeros(shape, dtype=dtype), spec)
+
+
+def ones_init(shape: tuple, spec: P, dtype) -> Param:
+    return Param(jnp.ones(shape, dtype=dtype), spec)
+
+
+def embed_init(key, vocab: int, d: int, spec: P, dtype) -> Param:
+    v = (jax.random.normal(key, (vocab, d), dtype=jnp.float32)).astype(dtype)
+    return Param(v, spec)
+
+
+# ---------------------------------------------------------------------------
+# Mesh-aware spec construction.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshInfo:
+    """Sizes of the logical axes actually present on the mesh.
+
+    ``shard_if`` returns the axis name only when it divides ``size`` — the
+    framework's divisibility rule (DESIGN.md §5): non-divisible dims fall
+    back to replication rather than failing (e.g. paligemma's single KV head
+    vs a 16-way model axis).  ``fsdp_if`` is the same rule for the
+    data(-parallel) axes when ZeRO-style parameter sharding is enabled.
+    """
+    data: int = 1                  # combined DP size (pod x data)
+    model: int = 1
+    data_axes: tuple = ("data",)   # mesh axis names folded into DP
+    model_axis: str = "model"
+    fsdp: bool = False
+
+    def dp(self):
+        return self.data_axes if len(self.data_axes) > 1 else self.data_axes[0]
+
+    def shard_if(self, size: int):
+        return self.model_axis if size % self.model == 0 else None
+
+    def fsdp_if(self, size: int):
+        if not self.fsdp:
+            return None
+        return self.dp() if size % self.data == 0 else None
+
+
+HOST_MESH = MeshInfo(data=1, model=1)
+
+
+def cast(tree, dtype):
+    return jax.tree.map(
+        lambda x: x.astype(dtype) if jnp.issubdtype(x.dtype, jnp.floating) else x,
+        tree)
+
+
+def cast_for_compute(tree, dtype):
+    """Mixed-precision cast: matrices go to the compute dtype; small vectors
+    and scalars (norm scales, gate biases, A_log, ...) keep their init dtype
+    (f32) for numerical stability."""
+    def f(x):
+        if jnp.issubdtype(x.dtype, jnp.floating) and x.ndim >= 2:
+            return x.astype(dtype)
+        return x
+    return jax.tree.map(f, tree)

@@ -1,0 +1,27 @@
+"""Modality frontends — STUBS per the assignment.
+
+The [audio]/[vlm] architecture entries specify the transformer backbone only;
+``input_specs()`` provides *precomputed* frame/patch embeddings.  These stubs
+project the provided embeddings into the backbone width (a single learned
+linear + norm), so the backbone remains end-to-end trainable while the real
+EnCodec/SigLIP towers stay out of scope.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.common import MeshInfo, dense_init
+
+
+def init_frontend(key, cfg, mesh: MeshInfo, dtype):
+    if cfg.frontend == "none":
+        return {}
+    d = cfg.d_model
+    return {"proj": dense_init(key, d, (d, d), P(None, None), dtype)}
+
+
+def apply_frontend(params, embeddings, cfg):
+    """embeddings: (B, T, D) precomputed frame/patch features -> (B, T, D)."""
+    return embeddings @ params["proj"]

@@ -1,0 +1,230 @@
+"""Mamba2 (SSD) block: chunked-scan training path + recurrent decode path.
+
+The SSD (state-space duality) recurrence per head (state ``h``: P x N):
+
+    h_t = exp(a_t) * h_{t-1} + dt_t * (x_t  (x)  B_t)         a_t = dt_t * A
+    y_t = (h_t @ C_t) + D * x_t
+
+Training uses the chunked algorithm: intra-chunk quadratic term + inter-chunk
+state carried by ``lax.scan`` (sub-quadratic in sequence length — this is why
+the hybrid/SSM archs run the ``long_500k`` cell).  ``ssd_chunked`` is shared
+with the mLSTM block (models/xlstm.py), whose matrix-memory recurrence is the
+same computation with (q, k, v) playing (C, B, x) and sigmoid gates playing
+(exp(a), dt).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.common import MeshInfo, Param, dense_init, ones_init, zeros_init
+
+
+# ---------------------------------------------------------------------------
+# Shared chunked-SSD core
+# ---------------------------------------------------------------------------
+
+
+def ssd_chunked(xh, a, dt, Bm, Cm, chunk: int, h0=None):
+    """Chunked SSD scan.
+
+    xh: (B, S, H, P)   per-head inputs ("v" in attention terms)
+    a:  (B, S, H)      log-decay per step (<= 0)
+    dt: (B, S, H)      input gate
+    Bm: (B, S, H, N)   input mixing ("k"; broadcast over H for mamba2 groups=1)
+    Cm: (B, S, H, N)   output mixing ("q")
+    h0: optional initial state (B, H, P, N)
+
+    Returns (y (B,S,H,P), h_final (B,H,P,N)).
+    """
+    b, s, h, p = xh.shape
+    n = Bm.shape[-1]
+    nc = math.ceil(s / chunk)
+    pad = nc * chunk - s
+    if pad:
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        a = jnp.pad(a, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    L = chunk
+    xc = xh.reshape(b, nc, L, h, p).astype(jnp.float32)
+    ac = a.reshape(b, nc, L, h).astype(jnp.float32)
+    dtc = dt.reshape(b, nc, L, h).astype(jnp.float32)
+    Bc = Bm.reshape(b, nc, L, h, n).astype(jnp.float32)
+    Cc = Cm.reshape(b, nc, L, h, n).astype(jnp.float32)
+
+    cum = jnp.cumsum(ac, axis=2)                       # (B,C,L,H)
+    # intra-chunk "attention": att[i,j] = exp(cum_i - cum_j) dt_j (C_i.B_j), j<=i
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]      # (B,C,L,L,H)
+    causal = jnp.tril(jnp.ones((L, L), dtype=bool))[None, None, :, :, None]
+    dec = jnp.where(causal, jnp.exp(jnp.minimum(seg, 0.0)), 0.0)
+    cb = jnp.einsum("bcihn,bcjhn->bcijh", Cc, Bc)        # (B,C,L,L,H)
+    att = dec * cb * dtc[:, :, None, :, :]              # (B,C,L,L,H)
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", att, xc)
+
+    # per-chunk aggregated state: S_c = sum_j exp(cum_L - cum_j) dt_j x_j (x) B_j
+    tail = jnp.exp(cum[:, :, -1:, :] - cum) * dtc        # (B,C,L,H)
+    s_chunk = jnp.einsum("bclh,bclhp,bclhn->bchpn", tail, xc, Bc)
+    a_chunk = jnp.exp(cum[:, :, -1, :])                  # (B,C,H) total decay
+
+    def step(hprev, inp):
+        s_c, a_c = inp                                   # (B,H,P,N), (B,H)
+        hnew = hprev * a_c[:, :, None, None] + s_c
+        return hnew, hprev
+
+    h_init = (jnp.zeros((b, h, p, n), dtype=jnp.float32) if h0 is None
+              else h0.astype(jnp.float32))
+    h_last, h_befores = jax.lax.scan(
+        step, h_init,
+        (jnp.moveaxis(s_chunk, 1, 0), jnp.moveaxis(a_chunk, 1, 0)))
+    h_befores = jnp.moveaxis(h_befores, 0, 1)            # (B,C,H,P,N)
+
+    # inter-chunk contribution: y_i += C_i . (exp(cum_i) * h_before)
+    y_inter = jnp.einsum("bcihn,bchpn,bcih->bcihp",
+                         Cc, h_befores, jnp.exp(cum))
+    y = (y_intra + y_inter).reshape(b, nc * L, h, p)
+    return y[:, :s].astype(xh.dtype), h_last
+
+
+def ssd_decode_step(h, x_t, a_t, dt_t, B_t, C_t):
+    """One recurrent step.  h: (B,H,P,N); x_t: (B,H,P); a/dt: (B,H);
+    B_t/C_t: (B,H,N).  Returns (y_t (B,H,P), h_new)."""
+    hf = h.astype(jnp.float32)
+    contrib = (dt_t[:, :, None, None] * x_t[:, :, :, None].astype(jnp.float32)
+               * B_t[:, :, None, :].astype(jnp.float32))
+    h_new = hf * jnp.exp(a_t.astype(jnp.float32))[:, :, None, None] + contrib
+    y = jnp.einsum("bhpn,bhn->bhp", h_new, C_t.astype(jnp.float32))
+    return y.astype(x_t.dtype), h_new
+
+
+# ---------------------------------------------------------------------------
+# Causal depthwise conv (width cfg.ssm_conv) with decode cache
+# ---------------------------------------------------------------------------
+
+
+def causal_conv(x, w, b):
+    """x: (B, S, C); w: (K, C); b: (C,) — depthwise causal conv."""
+    k = w.shape[0]
+    w = w.astype(x.dtype)
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(k))
+    return out + b.astype(x.dtype)
+
+
+def causal_conv_step(cache, x_t, w, b):
+    """cache: (B, K-1, C); x_t: (B, 1, C) -> (y_t, new_cache)."""
+    window = jnp.concatenate([cache.astype(x_t.dtype), x_t], axis=1)  # (B,K,C)
+    y = jnp.einsum("bkc,kc->bc", window, w.astype(x_t.dtype))[:, None, :] \
+        + b.astype(x_t.dtype)
+    return y, window[:, 1:, :]
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 block
+# ---------------------------------------------------------------------------
+
+
+def init_mamba2(key, cfg, mesh: MeshInfo, dtype):
+    d, di, n, hh = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    in_ax = mesh.shard_if(di)
+    h_ax = mesh.shard_if(hh)
+    fsdp = mesh.fsdp_if(d)
+    ks = jax.random.split(key, 8)
+    conv_ch = di  # conv over the x stream only (B/C kept conv-free for TP)
+    return {
+        "w_z": dense_init(ks[0], d, (d, di), P(fsdp, in_ax), dtype),
+        "w_x": dense_init(ks[1], d, (d, di), P(fsdp, in_ax), dtype),
+        "w_B": dense_init(ks[2], d, (d, n), P(fsdp, None), dtype),
+        "w_C": dense_init(ks[3], d, (d, n), P(fsdp, None), dtype),
+        "w_dt": dense_init(ks[4], d, (d, hh), P(fsdp, h_ax), dtype),
+        "dt_bias": zeros_init((hh,), P(h_ax), jnp.float32),
+        "A_log": Param(jnp.zeros((hh,), jnp.float32)
+                       + jnp.log(jnp.arange(1, hh + 1, dtype=jnp.float32)),
+                       P(h_ax)),
+        "Dskip": ones_init((hh,), P(h_ax), jnp.float32),
+        "conv_w": Param(jax.random.normal(ks[5], (cfg.ssm_conv, conv_ch),
+                                          dtype=jnp.float32).astype(dtype)
+                        * (1.0 / math.sqrt(cfg.ssm_conv)), P(None, in_ax)),
+        "conv_b": zeros_init((conv_ch,), P(in_ax), dtype),
+        "w_out": dense_init(ks[6], di, (di, d), P(in_ax, fsdp), dtype),
+        "norm_scale": ones_init((di,), P(in_ax), dtype),
+    }
+
+
+def _mamba2_inner(params, x, cfg):
+    z = x @ params["w_z"]
+    xs = x @ params["w_x"]
+    Bm = x @ params["w_B"]
+    Cm = x @ params["w_C"]
+    dt_raw = x @ params["w_dt"]
+    return z, xs, Bm, Cm, dt_raw
+
+
+def _gated_out(params, y, z, cfg, b, s):
+    di = cfg.d_inner
+    y = y.reshape(b, s, di)
+    # grouped RMSNorm then gate (mamba2's norm-before-gate)
+    yf = y.astype(jnp.float32)
+    ms = jnp.mean(jnp.square(yf), axis=-1, keepdims=True)
+    scale = params["norm_scale"].astype(jnp.float32)
+    y = (yf * jax.lax.rsqrt(ms + cfg.norm_eps) * scale).astype(z.dtype)
+    y = y * jax.nn.silu(z)
+    return y @ params["w_out"]
+
+
+def apply_mamba2(params, x, cfg):
+    """Training / prefill path.  x: (B, S, D) -> (y, h_final, conv_tail)."""
+    b, s, _ = x.shape
+    hh, p = cfg.ssm_heads, cfg.ssm_head_dim
+    z, xs, Bm, Cm, dt_raw = _mamba2_inner(params, x, cfg)
+    xs_conv = jax.nn.silu(causal_conv(xs, params["conv_w"], params["conv_b"]))
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])
+    a = -jnp.exp(params["A_log"])[None, None, :] * dt     # (B,S,H)
+    xh = xs_conv.reshape(b, s, hh, p)
+    n = cfg.ssm_state
+    Bh = jnp.broadcast_to(Bm[:, :, None, :], (b, s, hh, n))  # groups=1
+    Ch = jnp.broadcast_to(Cm[:, :, None, :], (b, s, hh, n))
+    y, h_last = ssd_chunked(xh, a, dt, Bh, Ch, cfg.ssm_chunk)
+    y = y + params["Dskip"][None, None, :, None] * xh.astype(jnp.float32)
+    out = _gated_out(params, y.astype(x.dtype), z, cfg, b, s)
+    conv_tail = xs[:, -(cfg.ssm_conv - 1):, :] if s >= cfg.ssm_conv - 1 else \
+        jnp.pad(xs, ((0, 0), (cfg.ssm_conv - 1 - s, 0), (0, 0)))
+    return out, h_last, conv_tail
+
+
+def init_mamba2_cache(cfg, mesh: MeshInfo, batch: int, dtype,
+                      batch_shard: bool = True):
+    di, hh, p, n = cfg.d_inner, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    in_ax = mesh.shard_if(di)
+    h_ax = mesh.shard_if(hh)
+    dp = mesh.dp() if batch_shard else None
+    return {
+        "h": Param(jnp.zeros((batch, hh, p, n), jnp.float32),
+                   P(dp, h_ax, None, None)),
+        "conv": Param(jnp.zeros((batch, cfg.ssm_conv - 1, di), dtype),
+                      P(dp, None, in_ax)),
+    }
+
+
+def decode_mamba2(params, cache, x, cfg):
+    """One-token decode.  x: (B, 1, D) -> (y (B,1,D), new_cache)."""
+    b = x.shape[0]
+    hh, p = cfg.ssm_heads, cfg.ssm_head_dim
+    z, xs, Bm, Cm, dt_raw = _mamba2_inner(params, x, cfg)
+    xc, conv_new = causal_conv_step(cache["conv"], xs,
+                                    params["conv_w"], params["conv_b"])
+    xc = jax.nn.silu(xc)
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) + params["dt_bias"])
+    a = -jnp.exp(params["A_log"])[None, :] * dt           # (B,H)
+    xh = xc.reshape(b, hh, p)
+    n = cfg.ssm_state
+    Bh = jnp.broadcast_to(Bm[:, 0, None, :], (b, hh, n))
+    Ch = jnp.broadcast_to(Cm[:, 0, None, :], (b, hh, n))
+    y, h_new = ssd_decode_step(cache["h"], xh, a, dt, Bh, Ch)
+    y = y + params["Dskip"][None, :, None] * xh.astype(jnp.float32)
+    out = _gated_out(params, y[:, None].astype(x.dtype), z, cfg, b, 1)
+    return out, {"h": h_new, "conv": conv_new}

@@ -1,0 +1,205 @@
+"""xLSTM blocks: mLSTM (matrix memory) and sLSTM (scalar memory).
+
+The mLSTM recurrence C_t = f_t C_{t-1} + i_t v_t k_t^T with read-out
+q_t^T C_t / max(|q_t^T n_t|, 1) is the same computation as the SSD scan
+(models/ssm.py) with (q, k, v) as (C, B, x), sigmoid gates as (exp(a), dt),
+and the normalizer n tracked by extending v with a ones column.  We therefore
+reuse ``ssd_chunked``/``ssd_decode_step`` — one scan core, two papers'
+blocks.  (Stability note: we use the sigmoid-input-gate mLSTM variant rather
+than exponential gating with running-max stabilisation; documented in
+DESIGN.md.)
+
+sLSTM has genuine recurrent mixing (R h_{t-1}) and cannot be parallelised
+over time — it runs as a ``lax.scan`` over steps with block-diagonal
+per-head recurrent matrices, exactly as the xLSTM paper prescribes.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.common import MeshInfo, Param, dense_init, ones_init, zeros_init
+from repro.models.ssm import (
+    causal_conv,
+    causal_conv_step,
+    ssd_chunked,
+    ssd_decode_step,
+)
+
+
+# ---------------------------------------------------------------------------
+# mLSTM block
+# ---------------------------------------------------------------------------
+
+
+def init_mlstm(key, cfg, mesh: MeshInfo, dtype):
+    d, di, hh = cfg.d_model, cfg.mlstm_inner, cfg.lstm_heads
+    in_ax = mesh.shard_if(di)
+    fsdp = mesh.fsdp_if(d)
+    ks = jax.random.split(key, 10)
+    return {
+        "w_up": dense_init(ks[0], d, (d, di), P(fsdp, in_ax), dtype),
+        "w_z": dense_init(ks[1], d, (d, di), P(fsdp, in_ax), dtype),
+        "w_q": dense_init(ks[2], di, (di, di), P(in_ax, None), dtype),
+        "w_k": dense_init(ks[3], di, (di, di), P(in_ax, None), dtype),
+        "w_v": dense_init(ks[4], di, (di, di), P(in_ax, None), dtype),
+        "w_i": dense_init(ks[5], di, (di, hh), P(in_ax, None), dtype),
+        "w_f": dense_init(ks[6], di, (di, hh), P(in_ax, None), dtype),
+        "f_bias": Param(jnp.full((hh,), 3.0, jnp.float32), P(None)),
+        "conv_w": Param((jax.random.normal(ks[7], (cfg.ssm_conv, di))
+                         / math.sqrt(cfg.ssm_conv)).astype(dtype), P(None, in_ax)),
+        "conv_b": zeros_init((di,), P(in_ax), dtype),
+        "norm_scale": ones_init((di,), P(in_ax), dtype),
+        "w_down": dense_init(ks[8], di, (di, d), P(in_ax, fsdp), dtype),
+    }
+
+
+def _mlstm_qkvif(params, xc, cfg, b, s):
+    hh = cfg.lstm_heads
+    p = cfg.mlstm_inner // hh
+    q = (xc @ params["w_q"]).reshape(b, s, hh, p)
+    k = (xc @ params["w_k"]).reshape(b, s, hh, p) * (p ** -0.5)
+    v = (xc @ params["w_v"]).reshape(b, s, hh, p)
+    i_gate = jax.nn.sigmoid((xc @ params["w_i"]).astype(jnp.float32))
+    logf = -jax.nn.softplus(
+        -((xc @ params["w_f"]).astype(jnp.float32) + params["f_bias"]))
+    return q, k, v, i_gate, logf
+
+
+def _mlstm_out(params, y_ext, z, cfg, b, s):
+    p = cfg.mlstm_inner // cfg.lstm_heads
+    y = y_ext[..., :p]
+    norm = y_ext[..., p:p + 1]
+    y = y / jnp.maximum(jnp.abs(norm), 1.0)
+    y = y.reshape(b, s, cfg.mlstm_inner)
+    yf = y.astype(jnp.float32)
+    ms = jnp.mean(jnp.square(yf), axis=-1, keepdims=True)
+    scale = params["norm_scale"].astype(jnp.float32)
+    y = (yf * jax.lax.rsqrt(ms + cfg.norm_eps) * scale).astype(z.dtype)
+    y = y * jax.nn.silu(z)
+    return y @ params["w_down"]
+
+
+def apply_mlstm(params, x, cfg):
+    """x: (B, S, D) -> (y, state, conv_tail)."""
+    b, s, _ = x.shape
+    xin = x @ params["w_up"]
+    z = x @ params["w_z"]
+    xc = jax.nn.silu(causal_conv(xin, params["conv_w"], params["conv_b"]))
+    q, k, v, i_gate, logf = _mlstm_qkvif(params, xc, cfg, b, s)
+    ones = jnp.ones(v.shape[:-1] + (1,), v.dtype)
+    v_ext = jnp.concatenate([v, ones], axis=-1)           # normalizer column
+    y_ext, h_last = ssd_chunked(v_ext, logf, i_gate, k, q, cfg.xlstm_chunk)
+    out = _mlstm_out(params, y_ext.astype(jnp.float32), z, cfg, b, s)
+    kconv = cfg.ssm_conv - 1
+    conv_tail = xin[:, -kconv:, :] if s >= kconv else \
+        jnp.pad(xin, ((0, 0), (kconv - s, 0), (0, 0)))
+    return out, h_last, conv_tail
+
+
+def init_mlstm_cache(cfg, mesh: MeshInfo, batch: int, dtype,
+                     batch_shard: bool = True):
+    di, hh = cfg.mlstm_inner, cfg.lstm_heads
+    p = di // hh
+    dp = mesh.dp() if batch_shard else None
+    return {
+        "h": Param(jnp.zeros((batch, hh, p + 1, p), jnp.float32),
+                   P(dp, None, None, None)),
+        "conv": Param(jnp.zeros((batch, cfg.ssm_conv - 1, di), dtype),
+                      P(dp, None, mesh.shard_if(di))),
+    }
+
+
+def decode_mlstm(params, cache, x, cfg):
+    b = x.shape[0]
+    xin = x @ params["w_up"]
+    z = x @ params["w_z"]
+    xc, conv_new = causal_conv_step(cache["conv"], xin,
+                                    params["conv_w"], params["conv_b"])
+    xc = jax.nn.silu(xc)
+    q, k, v, i_gate, logf = _mlstm_qkvif(params, xc, cfg, b, 1)
+    ones = jnp.ones(v.shape[:-1] + (1,), v.dtype)
+    v_ext = jnp.concatenate([v, ones], axis=-1)[:, 0]     # (B,H,P+1)
+    y_ext, h_new = ssd_decode_step(cache["h"], v_ext, logf[:, 0],
+                                   i_gate[:, 0], k[:, 0], q[:, 0])
+    out = _mlstm_out(params, y_ext[:, None].astype(jnp.float32), z, cfg, b, 1)
+    return out, {"h": h_new, "conv": conv_new}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM block
+# ---------------------------------------------------------------------------
+
+
+def init_slstm(key, cfg, mesh: MeshInfo, dtype):
+    d, hh = cfg.d_model, cfg.lstm_heads
+    q = d // hh
+    fsdp = mesh.fsdp_if(d)
+    ks = jax.random.split(key, 6)
+    ff = 2 * d
+    return {
+        "w_in": dense_init(ks[0], d, (d, 4, d), P(fsdp, None, None), dtype),
+        "r": Param((jax.random.normal(ks[1], (hh, 4, q, q)) / math.sqrt(q)
+                    ).astype(dtype), P(None, None, None, None)),
+        "bias": zeros_init((4, d), P(None, None), jnp.float32),
+        "f_bias": Param(jnp.full((d,), 3.0, jnp.float32), P(None)),
+        "w_ff1": dense_init(ks[2], d, (d, ff), P(fsdp, mesh.shard_if(ff)), dtype),
+        "w_ff2": dense_init(ks[3], ff, (ff, d), P(mesh.shard_if(ff), fsdp), dtype),
+    }
+
+
+def _slstm_cell(params, cfg, wx_t, state):
+    """wx_t: (B, 4, D) pre-computed input part; state: (h, c, n) each (B, D)."""
+    hh = cfg.lstm_heads
+    d = cfg.d_model
+    q = d // hh
+    h, c, n = state
+    hb = h.reshape(-1, hh, q)
+    rec = jnp.einsum("bhq,hgqr->bghr", hb.astype(jnp.float32),
+                     params["r"].astype(jnp.float32)).reshape(-1, 4, d)
+    pre = wx_t.astype(jnp.float32) + rec + params["bias"]
+    z = jnp.tanh(pre[:, 0])
+    i = jax.nn.sigmoid(pre[:, 1])
+    f = jax.nn.sigmoid(pre[:, 2] + params["f_bias"])
+    o = jax.nn.sigmoid(pre[:, 3])
+    c_new = f * c + i * z
+    n_new = f * n + i
+    h_new = o * c_new / jnp.maximum(n_new, 1e-6)
+    return h_new, c_new, n_new
+
+
+def apply_slstm(params, x, cfg):
+    """x: (B, S, D) -> (y, final_state). Sequential scan over time."""
+    b, s, d = x.shape
+    wx = jnp.einsum("bsd,dge->bsge", x, params["w_in"])   # (B,S,4,D)
+    state0 = tuple(jnp.zeros((b, d), jnp.float32) for _ in range(3))
+
+    def step(state, wx_t):
+        new = _slstm_cell(params, cfg, wx_t, state)
+        return new, new[0]
+
+    state, hs = jax.lax.scan(step, state0, jnp.moveaxis(wx, 1, 0))
+    y = jnp.moveaxis(hs, 0, 1).astype(x.dtype)            # (B,S,D)
+    # post-MLP (GeLU), as in the xLSTM sLSTM block
+    y = jax.nn.gelu(y @ params["w_ff1"]) @ params["w_ff2"]
+    return y, state
+
+
+def init_slstm_cache(cfg, mesh: MeshInfo, batch: int, dtype,
+                     batch_shard: bool = True):
+    d = cfg.d_model
+    dp = mesh.dp() if batch_shard else None
+    mk = lambda: Param(jnp.zeros((batch, d), jnp.float32), P(dp, None))  # noqa: E731
+    return {"h": mk(), "c": mk(), "n": mk()}
+
+
+def decode_slstm(params, cache, x, cfg):
+    wx = jnp.einsum("bsd,dge->bsge", x, params["w_in"])[:, 0]
+    state = (cache["h"], cache["c"], cache["n"])
+    h, c, n = _slstm_cell(params, cfg, wx, state)
+    y = h[:, None, :].astype(x.dtype)
+    y = jax.nn.gelu(y @ params["w_ff1"]) @ params["w_ff2"]
+    return y, {"h": h, "c": c, "n": n}

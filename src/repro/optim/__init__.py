@@ -1,0 +1,21 @@
+from repro.optim.adamw import (
+    AdamWConfig,
+    adamw_update,
+    global_norm,
+    init_opt_state,
+    lr_schedule,
+    opt_state_specs,
+)
+from repro.optim.compression import (
+    compress_tree,
+    decompress_tree,
+    init_error_buffer,
+    psum_compressed,
+    quantize_int8,
+)
+
+__all__ = [
+    "AdamWConfig", "adamw_update", "global_norm", "init_opt_state",
+    "lr_schedule", "opt_state_specs", "compress_tree", "decompress_tree",
+    "init_error_buffer", "psum_compressed", "quantize_int8",
+]

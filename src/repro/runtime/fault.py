@@ -1,0 +1,49 @@
+"""Fault-tolerance utilities: step watchdog (straggler detection) and the
+training-loop guard logic.
+
+At 1000+ nodes the failure model is: (a) preemption signals (handled by
+``CheckpointManager.install_preemption_handler`` -> emergency save), (b)
+hard node loss (handled by restart-from-latest + elastic resharding, see
+``checkpoint.manager`` and tests/test_fault.py), and (c) stragglers — slow
+steps that stall the synchronous collective.  The watchdog keeps an EMA of
+step wall-time and flags outliers; on a real fleet the launcher would
+re-slot the offending host (here we log and count, which is what the
+training loop can observe portably).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+
+@dataclasses.dataclass
+class StepWatchdog:
+    threshold: float = 2.0        # x EMA considered a straggler step
+    decay: float = 0.9
+    ema: float | None = None
+    straggler_steps: int = 0
+    total_steps: int = 0
+    _t0: float | None = None
+
+    def start(self) -> None:
+        self._t0 = time.perf_counter()
+
+    def stop(self) -> bool:
+        """Returns True if this step was a straggler."""
+        assert self._t0 is not None, "start() not called"
+        dt = time.perf_counter() - self._t0
+        self._t0 = None
+        self.total_steps += 1
+        slow = self.ema is not None and dt > self.threshold * self.ema
+        if slow:
+            self.straggler_steps += 1
+        # EMA excludes straggler samples so one slow host can't mask itself
+        if self.ema is None:
+            self.ema = dt
+        elif not slow:
+            self.ema = self.decay * self.ema + (1 - self.decay) * dt
+        return slow
+
+    def summary(self) -> dict:
+        return {"steps": self.total_steps, "stragglers": self.straggler_steps,
+                "ema_step_s": self.ema}

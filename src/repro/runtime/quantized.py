@@ -1,0 +1,98 @@
+"""Weight-only int8 quantization for serving.
+
+Decode is parameter-read-bound (EXPERIMENTS.md §Roofline: every decode cell's
+dominant term is memory, rf ~1e-4), and the paper's whole setting is INT8
+GEMM — so the natural beyond-paper optimization is to store serving weights
+as int8 with per-output-channel scales and dequantise *inside* the fused
+matmul (XLA folds the convert+multiply into the dot's operand), halving the
+HBM bytes per decoded token vs bf16.
+
+``quantize_params`` maps every large floating matrix to a ``QuantizedTensor``
+(int8 data + f32 scale); ``dequantize_params`` restores a compute-dtype tree
+at step entry — inside jit, so consumers fuse the dequant.  Small tensors
+(norm scales, biases, embeddings' scale vectors) stay in their origin dtype.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class QuantizedTensor:
+    q: Any            # int8 array
+    scale: Any        # f32, broadcastable to q's shape
+
+    def tree_flatten(self):
+        return (self.q, self.scale), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    @property
+    def shape(self):
+        return self.q.shape
+
+
+def _is_qt(x) -> bool:
+    return isinstance(x, QuantizedTensor)
+
+
+def quantize_params(values, min_size: int = 1 << 14):
+    """Per-axis0-channel symmetric int8 quantisation of large matrices."""
+    def q(x):
+        if (hasattr(x, "ndim") and x.ndim >= 2 and x.size >= min_size
+                and jnp.issubdtype(x.dtype, jnp.floating)):
+            axes = tuple(range(1, x.ndim))
+            amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=axes,
+                           keepdims=True)
+            scale = jnp.maximum(amax, 1e-12) / 127.0
+            qv = jnp.clip(jnp.round(x.astype(jnp.float32) / scale),
+                          -127, 127).astype(jnp.int8)
+            return QuantizedTensor(qv, scale)
+        return x
+    return jax.tree.map(q, values)
+
+
+def quantized_specs(values, specs):
+    """Spec tree matching ``quantize_params`` output structure."""
+    from jax.sharding import PartitionSpec as P
+
+    def q(x, s):
+        if (hasattr(x, "ndim") and x.ndim >= 2 and x.size >= (1 << 14)
+                and jnp.issubdtype(x.dtype, jnp.floating)):
+            scale_spec = P(*( (s[0] if len(s) else None,)
+                              + (None,) * (x.ndim - 1)))
+            return QuantizedTensor(s, scale_spec)
+        return s
+    return jax.tree.map(q, values, specs)
+
+
+def dequantize_params(tree, dtype):
+    """QuantizedTensor leaves -> dtype arrays (fused into consumers by XLA)."""
+    def d(x):
+        if _is_qt(x):
+            return (x.q.astype(jnp.float32) * x.scale).astype(dtype)
+        return x
+    return jax.tree.map(d, tree, is_leaf=_is_qt)
+
+
+def quantization_error(values, dtype=jnp.bfloat16):
+    """Max relative error per quantised leaf (for tests)."""
+    qt = quantize_params(values)
+    dq = dequantize_params(qt, jnp.float32)
+    errs = {}
+    flat_v = jax.tree_util.tree_leaves_with_path(values)
+    dq_map = dict(jax.tree_util.tree_leaves_with_path(dq))
+    for path, v in flat_v:
+        if hasattr(v, "ndim") and v.ndim >= 2 and v.size >= (1 << 14):
+            w = dq_map[path]
+            denom = jnp.max(jnp.abs(v.astype(jnp.float32))) + 1e-12
+            errs[jax.tree_util.keystr(path)] = float(
+                jnp.max(jnp.abs(v.astype(jnp.float32) - w)) / denom)
+    return errs

@@ -1,0 +1,54 @@
+"""Serving-step builders: prefill and decode, pjit-able, with sampling."""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ParallelConfig, ShapeConfig
+from repro.models.common import split_params
+from repro.models.model import LM
+
+
+def make_prefill_step(lm: LM) -> Callable:
+    def prefill_step(params, batch):
+        logits, caches = lm.prefill(params, batch)
+        return logits, caches
+    return prefill_step
+
+
+def make_decode_step(lm: LM, greedy: bool = True) -> Callable:
+    """decode_step(params, caches, token, pos) -> (next_token, logits,
+    caches).  Sampling masks the padded vocab tail."""
+    vocab = lm.cfg.vocab_size
+
+    def decode_step(params, caches, token, pos):
+        logits, caches = lm.decode_step(params, caches, token, pos)
+        logits = logits.astype(jnp.float32)
+        vp = logits.shape[-1]
+        if vp > vocab:
+            logits = logits.at[..., vocab:].set(-1e9)
+        next_token = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        return next_token, logits, caches
+
+    return decode_step
+
+
+def abstract_cache(lm: LM, batch: int, max_len: int, *, seq_shard=False,
+                   batch_shard=True):
+    """ShapeDtypeStruct cache + spec trees (dry-run path)."""
+    tree = jax.eval_shape(functools.partial(
+        lm.init_cache, batch, max_len, seq_shard=seq_shard,
+        batch_shard=batch_shard))
+    return split_params(tree)
+
+
+def serve_plan(cfg: ModelConfig, shape: ShapeConfig, minfo):
+    """Decide decode-cell sharding: DP over batch when divisible; otherwise
+    (long_500k, batch=1) SP over the KV sequence axis."""
+    batch_shard = shape.global_batch % minfo.data == 0
+    seq_shard = (not batch_shard)
+    return {"batch_shard": batch_shard, "seq_shard": seq_shard}

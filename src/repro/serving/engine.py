@@ -1,0 +1,175 @@
+"""Slot-based continuous-batching serving engine.
+
+A fixed pool of ``max_batch`` decode slots, each holding one sequence's
+KV/state caches at its own position (the decode step takes an (B,) position
+vector).  New requests prefill individually (bucketed lengths keep the jit
+cache small) and are *inserted* into a free slot's cache region; finished
+slots free immediately — no batch-wide barrier, the defining property of
+continuous batching.
+
+Everything is jitted once per bucket shape; the engine itself is plain
+Python and runs on CPU in the tests/examples with a smoke model.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import split_params
+from repro.models.model import LM
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: list            # token ids
+    max_new_tokens: int = 16
+    eos_id: int | None = None
+    generated: list = dataclasses.field(default_factory=list)
+
+    @property
+    def done(self) -> bool:
+        if self.eos_id is not None and self.generated \
+                and self.generated[-1] == self.eos_id:
+            return True
+        return len(self.generated) >= self.max_new_tokens
+
+
+def _bucket(n: int, buckets=(32, 64, 128, 256, 512, 1024)) -> int:
+    for b in buckets:
+        if n <= b:
+            return b
+    return ((n + 1023) // 1024) * 1024
+
+
+class ServingEngine:
+    def __init__(self, lm: LM, params, *, max_batch: int = 4,
+                 max_len: int = 512):
+        self.lm = lm
+        self.params = params
+        self.max_batch = max_batch
+        self.max_len = max_len
+        caches, _ = split_params(lm.init_cache(max_batch, max_len))
+        self.caches = caches
+        self.slot_pos = [0] * max_batch          # next write position
+        self.slot_req: list[Request | None] = [None] * max_batch
+        self.queue: list[Request] = []
+        self.finished: list[Request] = []
+        self._decode = jax.jit(self._decode_impl)
+        self._prefill = {}
+        self._insert = jax.jit(self._insert_impl, static_argnums=(2,),
+                               donate_argnums=(0,))
+
+    # -- jitted pieces --------------------------------------------------------
+    def _decode_impl(self, params, caches, tokens, pos_vec, active):
+        logits, caches = self.lm.decode_step(params, caches, tokens, pos_vec)
+        logits = logits.astype(jnp.float32)
+        vp = logits.shape[-1]
+        if vp > self.lm.cfg.vocab_size:
+            logits = logits.at[..., self.lm.cfg.vocab_size:].set(-1e9)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return nxt, caches
+
+    def _prefill_fn(self, bucket: int) -> Callable:
+        if bucket not in self._prefill:
+            def fn(params, tokens):
+                _, caches = self.lm.prefill(params, {"tokens": tokens})
+                return caches
+            self._prefill[bucket] = jax.jit(fn)
+        return self._prefill[bucket]
+
+    def _insert_impl(self, caches, pref, slot: int):
+        """Insert a single-sequence prefill cache into slot ``slot``.
+
+        Stack caches have batch axis 1 ((periods, B, ...)); tail caches axis
+        0.  Sequence axes shorter than the slot's are zero-padded."""
+        stack_key = jax.tree_util.DictKey("stack")
+
+        def ins(path, slot_leaf, pref_leaf):
+            baxis = 1 if path and path[0] == stack_key else 0
+            pl = pref_leaf
+            # pad every non-batch dim up to the slot leaf's size
+            pads = [(0, 0) if (i == baxis or a == b) else (0, b - a)
+                    for i, (a, b) in enumerate(zip(pl.shape, slot_leaf.shape))]
+            if any(p[1] for p in pads):
+                pl = jnp.pad(pl, pads)
+            start = [0] * slot_leaf.ndim
+            start[baxis] = slot
+            return jax.lax.dynamic_update_slice(
+                slot_leaf, pl.astype(slot_leaf.dtype), tuple(start))
+
+        return jax.tree_util.tree_map_with_path(ins, caches, pref)
+
+    # -- public API ---------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _free_slots(self) -> list[int]:
+        return [i for i, r in enumerate(self.slot_req) if r is None]
+
+    def _admit(self) -> None:
+        for slot in self._free_slots():
+            if not self.queue:
+                break
+            req = self.queue.pop(0)
+            ptoks = req.prompt[-self.max_len + req.max_new_tokens:]
+            # prefill all but the last prompt token; the first decode step
+            # feeds prompt[-1] at position len-1 (cache then logits in one).
+            prefix = ptoks[:-1]
+            if prefix:
+                # recurrent blocks fold every token into their state, so pad
+                # tokens would corrupt it: exact-length prefill for those.
+                recurrent = any(k in ("mamba2", "mlstm", "slstm")
+                                for k in self.lm.cfg.block_pattern)
+                bucket = (len(prefix) if recurrent
+                          else min(_bucket(len(prefix)), self.max_len))
+                toks = jnp.zeros((1, bucket), jnp.int32)
+                toks = toks.at[0, :len(prefix)].set(
+                    jnp.array(prefix, jnp.int32))
+                pref = self._prefill_fn(bucket)(self.params, toks)
+                self.caches = self._insert(self.caches, pref, slot)
+            self.slot_pos[slot] = len(ptoks) - 1
+            self.slot_req[slot] = req
+
+    def step(self) -> list[Request]:
+        """Admit + one decode step for all active slots; returns newly
+        finished requests."""
+        self._admit()
+        active = [i for i, r in enumerate(self.slot_req) if r is not None]
+        if not active:
+            return []
+        tokens = jnp.zeros((self.max_batch, 1), jnp.int32)
+        for i in active:
+            r = self.slot_req[i]
+            last = r.generated[-1] if r.generated else r.prompt[-1]
+            tokens = tokens.at[i, 0].set(last)
+        # inactive slots decode harmlessly at position 0 (outputs ignored;
+        # admission overwrites their cache region)
+        pos_vec = jnp.minimum(jnp.array(self.slot_pos, jnp.int32),
+                              self.max_len - 1)
+        active_mask = jnp.array([r is not None for r in self.slot_req])
+        nxt, self.caches = self._decode(self.params, self.caches, tokens,
+                                        pos_vec, active_mask)
+        out = []
+        for i in active:
+            r = self.slot_req[i]
+            r.generated.append(int(nxt[i]))
+            self.slot_pos[i] += 1
+            if r.done or self.slot_pos[i] >= self.max_len - 1:
+                self.finished.append(r)
+                out.append(r)
+                self.slot_req[i] = None
+                self.slot_pos[i] = 0
+        return out
+
+    def run_until_drained(self, max_steps: int = 10_000) -> list[Request]:
+        for _ in range(max_steps):
+            self.step()
+            if not self.queue and all(r is None for r in self.slot_req):
+                break
+        return self.finished

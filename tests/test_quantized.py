@@ -1,0 +1,83 @@
+"""Weight-only int8 serving quantization + calibration-methodology tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.models.common import HOST_MESH, split_params
+from repro.models.model import LM
+from repro.runtime.quantized import (
+    QuantizedTensor,
+    dequantize_params,
+    quantization_error,
+    quantize_params,
+)
+
+
+def test_quantize_roundtrip_error_bounded():
+    lm = LM(get_config("qwen2-1.5b", smoke=True), HOST_MESH)
+    values, _ = split_params(lm.init(jax.random.key(0)))
+    errs = quantization_error(values)
+    assert errs, "expected at least one quantised leaf"
+    assert max(errs.values()) < 1.0 / 127 + 1e-3   # per-channel symmetric
+
+
+def test_small_tensors_not_quantized():
+    tree = {"norm": jnp.ones((64,)), "w": jnp.ones((256, 256))}
+    q = quantize_params(tree, min_size=1 << 10)
+    assert not isinstance(q["norm"], QuantizedTensor)
+    assert isinstance(q["w"], QuantizedTensor)
+    assert q["w"].q.dtype == jnp.int8
+
+
+def test_quantized_decode_logits_close_to_fp():
+    """Decode logits with int8 weights stay close to the fp logits."""
+    cfg = get_config("qwen2-1.5b", smoke=True)
+    lm = LM(cfg, HOST_MESH)
+    values, _ = split_params(lm.init(jax.random.key(1)))
+    vq = dequantize_params(quantize_params(values, min_size=1 << 10),
+                           jnp.dtype(cfg.compute_dtype))
+
+    def logits_seq(vals):
+        caches, _ = split_params(lm.init_cache(1, 16))
+        out = []
+        for t, tok in enumerate([3, 7, 11, 2, 5]):
+            lg, caches = lm.decode_step(vals, caches,
+                                        jnp.array([[tok]], jnp.int32),
+                                        jnp.int32(t))
+            out.append(lg.astype(jnp.float32)[..., :cfg.vocab_size])
+        return jnp.stack(out)
+
+    fp = logits_seq(values)
+    q = logits_seq(vq)
+    scale = float(jnp.max(jnp.abs(fp))) + 1e-6
+    assert float(jnp.max(jnp.abs(fp - q))) / scale < 0.15
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2 ** 16))
+def test_quantization_per_channel_scales(seed):
+    rng = np.random.default_rng(seed)
+    # rows with wildly different magnitudes: per-channel scales must adapt
+    w = jnp.array(rng.normal(size=(256, 128)) *
+                  (10.0 ** rng.integers(-3, 3, size=(256, 1))), jnp.float32)
+    qt = quantize_params({"w": w}, min_size=1)["w"]
+    back = qt.q.astype(jnp.float32) * qt.scale
+    rel = np.abs(np.asarray(back - w)) / (np.abs(np.asarray(w)) + 1e-9)
+    # elements at >= 1% of their row max are accurate to ~1%
+    row_max = np.abs(np.asarray(w)).max(axis=1, keepdims=True)
+    big = np.abs(np.asarray(w)) > 0.01 * row_max
+    assert rel[big].max() < 0.5
+
+
+def test_calibration_methodology_runs():
+    """Paper §3.2 methodology on this host: rates positive, packing rate
+    roughly monotone in chunk size (the paper's linearity claim, loosely)."""
+    from repro.core.calibrate import calibrate_host, measure_packing_rate
+    spec = calibrate_host()
+    assert spec.arith_rate["int8"] > 0
+    r4 = measure_packing_rate(4, rows=512, cols=512)
+    r32 = measure_packing_rate(32, rows=512, cols=512)
+    assert r32 > r4 * 1.2          # bigger chunks pack faster

@@ -1,0 +1,103 @@
+"""Tests for the HLO collective-bytes parser and roofline report."""
+import pytest
+
+from repro.core.roofline import (
+    RooflineReport,
+    collective_bytes,
+    from_compiled,
+    shape_bytes,
+)
+
+HLO = """
+HloModule jit_train_step, entry_computation_layout={...}
+
+ENTRY %main (p0: bf16[256,4096,2048]) -> bf16[256,4096,2048] {
+  %p0 = bf16[256,4096,2048]{2,1,0} parameter(0)
+  %ar = bf16[256,4096,2048]{2,1,0} all-reduce(%p0), replica_groups={{0,1}}, to_apply=%add
+  %ag = f32[1024,512]{1,0} all-gather(%x), replica_groups=[256,2]<=[512], dimensions={0}
+  %rs = f32[256,512]{1,0} reduce-scatter(%y), replica_groups=[256,2]<=[512], dimensions={0}, to_apply=%add
+  %cp = u32[16]{0} collective-permute(%z), source_target_pairs={{0,1}}
+  %a2a = bf16[64,64]{1,0} all-to-all(%w), replica_groups={{0,1,2,3}}, dimensions={0}
+  %vt = (f32[40,1536]{1,0}, f32[40,1536,32]{2,1,0}) all-reduce(%a, %b), replica_groups=[16,16]<=[16,16]T(1,0), to_apply=%add
+  %fusion.1 = bf16[8,8]{1,0} fusion(%q), kind=kLoop, calls=%fused
+  ROOT %out = bf16[256,4096,2048]{2,1,0} copy(%ar)
+}
+"""
+
+
+def test_shape_bytes():
+    assert shape_bytes("bf16", "256,4096,2048") == 256 * 4096 * 2048 * 2
+    assert shape_bytes("f32", "512,512") == 512 * 512 * 4
+    assert shape_bytes("pred", "8") == 8
+
+
+def test_collective_bytes_parses_all_ops():
+    """Operand bytes derived from result shape x op semantics (XLA dumps
+    print operands without types); group size from replica_groups."""
+    c = collective_bytes(HLO)
+    vt = (40 * 1536 + 40 * 1536 * 32) * 4           # variadic tuple result
+    assert c["all-reduce"] == 256 * 4096 * 2048 * 2 + vt
+    assert c["all-gather"] == 1024 * 512 * 4 / 2    # result / group(2)
+    assert c["reduce-scatter"] == 256 * 512 * 4 * 2  # result * group(2)
+    assert c["collective-permute"] == 16 * 4
+    assert c["all-to-all"] == 64 * 64 * 2
+    assert c["_count"] == 6
+    assert c["_total"] == sum(
+        c[k] for k in ("all-reduce", "all-gather", "reduce-scatter",
+                       "collective-permute", "all-to-all"))
+
+
+def test_collective_bytes_ignores_non_collectives():
+    c = collective_bytes("%x = f32[8,8] dot(f32[8,8] %a, f32[8,8] %b)")
+    assert c["_total"] == 0
+
+
+def test_async_start_done_counted_once():
+    hlo = """
+  %ars = bf16[1024]{0} all-reduce-start(%p), to_apply=%add
+  %ard = bf16[1024]{0} all-reduce-done(%ars)
+"""
+    c = collective_bytes(hlo)
+    assert c["all-reduce"] == 1024 * 2
+
+
+def test_roofline_report_terms():
+    # hlo_* are PER-DEVICE values (cost_analysis on SPMD modules reports the
+    # partitioned program; verified in test_cost_analysis_is_per_device).
+    r = RooflineReport(
+        arch="qwen2-7b", shape_name="train_4k", mesh="pod16x16", chips=256,
+        hlo_flops=1e15, hlo_bytes=1e11, coll_bytes=1e10,
+        model_flops=128e15, coll_detail={},
+    )
+    assert r.t_compute == pytest.approx(1e15 / 197e12)
+    assert r.t_memory == pytest.approx(1e11 / 819e9)
+    assert r.t_collective == pytest.approx(1e10 / 50e9)
+    assert r.dominant == "compute"
+    assert r.useful_flop_ratio == pytest.approx(128e15 / (1e15 * 256))
+    assert 0 < r.roofline_fraction <= 1.0
+
+
+def test_cost_analysis_is_per_device():
+    """Pin the semantics the roofline relies on: XLA cost_analysis of an
+    SPMD-partitioned module counts ONE device's program."""
+    import jax
+    import jax.numpy as jnp
+    if len(jax.devices()) < 2:
+        pytest.skip("single-device run")
+    mesh = jax.make_mesh((len(jax.devices()),), ("d",))
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    sh = NamedSharding(mesh, P("d", None))
+    n = 256 * len(jax.devices())
+    a = jax.ShapeDtypeStruct((n, 128), jnp.float32, sharding=sh)
+    w = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+    c = jax.jit(lambda a, w: a @ w, in_shardings=(sh, None)).lower(a, w).compile()
+    flops = c.cost_analysis()["flops"]
+    per_dev = 2 * (n // len(jax.devices())) * 128 * 128
+    assert flops == pytest.approx(per_dev, rel=0.05)
+
+
+def test_from_compiled_smoke():
+    r = from_compiled("a", "s", "m", 256, {"flops": 1e12, "bytes accessed": 1e9},
+                      HLO, model_flops=5e11)
+    assert r.coll_bytes > 0
+    assert r.hlo_flops == 1e12
