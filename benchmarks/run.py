@@ -22,13 +22,19 @@ import time
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-from repro.core.hardware import GAP8_FC
+from repro import gemm as gemm_api
 from repro.core.mobilenet import LAYER10, TABLE2
-from repro.core.simulator import best_microkernel, simulate
-from repro.core.tpu_model import GemmShape
-from repro.core.variants import MicroKernel, Variant, feasible_microkernels
-from repro.core.autotune import model_gemm_shapes, tune
+from repro.core.variants import MicroKernel, Variant
 from repro.configs import ARCH_IDS, get_config
+
+
+def _gap8_plan(prob, variant=None, mk=None, cache=True):
+    opts = {}
+    if variant is not None:
+        opts["variant"] = variant
+    if mk is not None:
+        opts["micro_kernel"] = mk
+    return gemm_api.plan(prob, backend="analytic-gap8", cache=cache, **opts)
 
 
 def _timed(fn, reps=3):
@@ -44,8 +50,8 @@ def bench_fig4() -> list[str]:
     detail = ["  fig4 detail: mk, packing, unpacking, copy, stream_M, "
               "stream_L1, stream_L2, arith, total(s)"]
     for mk in (MicroKernel(4, 4), MicroKernel(4, 8), MicroKernel(4, 12)):
-        cb, us = _timed(lambda mk=mk: simulate(GAP8_FC, Variant.B3C2A0, mk,
-                                               LAYER10))
+        cb, us = _timed(lambda mk=mk: _gap8_plan(
+            LAYER10, Variant.B3C2A0, mk, cache=False).estimate())
         g = cb.grouped()
         rows.append(f"fig4_B3C2A0_{mk},{us:.1f},{cb.total:.4f}")
         detail.append(
@@ -59,7 +65,8 @@ def bench_fig5() -> list[str]:
     """Layer-10 sweep: per-variant best micro-kernel + time (paper Fig. 5)."""
     rows = []
     for v in Variant:
-        cb, us = _timed(lambda v=v: best_microkernel(GAP8_FC, v, LAYER10))
+        cb, us = _timed(lambda v=v: _gap8_plan(LAYER10, v,
+                                               cache=False).estimate())
         rows.append(f"fig5_{v.value},{us:.1f},{cb.total:.4f}")
         rows.append(f"  fig5 detail: {v.value} best={cb.micro_kernel} "
                     f"blocking=(m_c={cb.blocking.m_c} n_c={cb.blocking.n_c} "
@@ -75,7 +82,7 @@ def bench_table2() -> list[str]:
     for row in TABLE2:
         cells = []
         for v in Variant:
-            cb = best_microkernel(GAP8_FC, v, row.problem)
+            cb = _gap8_plan(row.problem, v, cache=False).estimate()
             paper = row.best[v.value]
             ok = (cb.micro_kernel.rows, cb.micro_kernel.cols) == \
                  (paper.rows, paper.cols)
@@ -97,7 +104,7 @@ def bench_fig6() -> list[str]:
     wins = {v: 0 for v in Variant}
     t0 = time.perf_counter()
     for row in TABLE2:
-        best = {v: best_microkernel(GAP8_FC, v, row.problem).total
+        best = {v: _gap8_plan(row.problem, v, cache=False).predicted_seconds
                 for v in Variant}
         for v in Variant:
             totals[v] += best[v]
@@ -121,21 +128,21 @@ def bench_tpu_autotune() -> list[str]:
     rows = []
     for arch in ARCH_IDS:
         cfg = get_config(arch)
-        shapes = model_gemm_shapes(cfg)
         t0 = time.perf_counter()
+        plans = gemm_api.plan_model_gemms(cfg, backend="analytic-tpu")
         no_overlap = overlapped = 0.0
         worst = None
-        for s in shapes:
-            d = tune(s)
+        for d in plans:
+            s = d.problem
             no_overlap += d.cost.total_no_overlap
             overlapped += d.cost.total_overlapped
             rf = d.cost.roofline_fraction()
             if worst is None or rf < worst[1]:
-                worst = (s, rf, d.tile)
+                worst = (s, rf, d.selection)
         us = (time.perf_counter() - t0) * 1e6
         speedup = no_overlap / overlapped
         rows.append(f"tpu_autotune_{arch},{us:.0f},{speedup:.3f}x_overlap_gain")
-        rows.append(f"  {arch}: {len(shapes)} GEMMs, paper-mode "
+        rows.append(f"  {arch}: {len(plans)} GEMMs, paper-mode "
                     f"{no_overlap*1e6:.1f}us -> overlapped "
                     f"{overlapped*1e6:.1f}us; worst rf={worst[1]:.3f} "
                     f"{worst[0].m}x{worst[0].n}x{worst[0].k} tile={worst[2]}")
@@ -163,6 +170,9 @@ def main() -> None:
                bench_tpu_autotune, bench_roofline):
         for line in fn():
             print(line)
+    stats = gemm_api.plan_cache_stats()
+    print(f"plan_cache,0,hits={stats['hits']}:misses={stats['misses']}"
+          f":size={stats['size']}")
 
 
 if __name__ == "__main__":

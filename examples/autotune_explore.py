@@ -1,7 +1,7 @@
-"""The paper's workflow, end to end: explore GEMM algorithm alternatives
-*before* implementing them — first on the paper's GAP8 target, then on TPU
-via TileTuner, then validate the chosen tile against the Pallas kernel in
-interpret mode.
+"""The paper's workflow, end to end, through the unified ``repro.gemm`` API:
+explore GEMM algorithm alternatives *before* implementing them — first on the
+paper's GAP8 target, then on TPU via the analytic tile search, then validate
+the chosen plan against the Pallas kernel in interpret mode.
 
     PYTHONPATH=src python examples/autotune_explore.py --m 512 --n 2048 --k 1024
 """
@@ -14,17 +14,10 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (
-    GAP8_FC,
-    GemmShape,
-    Problem,
-    Variant,
-    best_microkernel,
-    tune,
-)
+from repro import gemm
+from repro.core import GemmShape, Variant
 from repro.core.autotune import candidate_tiles
 from repro.core.tpu_model import estimate
-from repro.kernels.ops import matmul
 from repro.kernels.ref import gemm_ref
 
 
@@ -37,16 +30,16 @@ def main() -> None:
 
     print(f"GEMM {a.m} x {a.n} x {a.k}")
     print("\n--- GAP8 (the paper's target): algorithmic variants ---")
-    prob = Problem(a.m, a.n, a.k)
     for v in Variant:
-        cb = best_microkernel(GAP8_FC, v, prob)
+        cb = gemm.plan((a.m, a.n, a.k), backend="analytic-gap8",
+                       variant=v).estimate()
         g = cb.grouped()
         print(f"  {v.value}: mk={cb.micro_kernel} total={cb.total:.3f}s  "
               f"[pack {g['packing']:.2f} | copy {g['copy']:.2f} | "
               f"streams {g['stream_M'] + g['stream_L1'] + g['stream_L2']:.2f} "
               f"| arith {g['arith']:.2f}]")
 
-    print("\n--- TPU v5e: TileTuner over the Pallas design space ---")
+    print("\n--- TPU v5e: the analytic search over the Pallas design space ---")
     shape = GemmShape(a.m, a.n, a.k, "bf16")
     ranked = sorted(candidate_tiles(shape),
                     key=lambda t: estimate(shape, t).total())[:5]
@@ -55,17 +48,20 @@ def main() -> None:
         print(f"  {str(t):>24}: {c.total()*1e6:8.1f}us  "
               f"rf={c.roofline_fraction():.3f}  hbm={c.hbm_bytes/1e6:.1f}MB  "
               f"vmem={c.vmem_peak/1e6:.1f}MB")
-    best = tune(shape)
-    print(f"  chosen: {best.tile}")
+    best = gemm.plan((a.m, a.n, a.k), backend="analytic-tpu", dtype="bf16")
+    print(f"  chosen: {best.selection}  ({best.provenance['source']})")
 
-    print("\n--- validate the chosen tile against the kernel (interpret) ---")
+    print("\n--- validate the chosen plan against the kernel (interpret) ---")
     rng = np.random.default_rng(0)
     m, n, k = min(a.m, 256), min(a.n, 256), min(a.k, 256)
     x = jnp.array(rng.normal(size=(m, k)), jnp.float32)
     w = jnp.array(rng.normal(size=(k, n)), jnp.float32)
-    got = matmul(x, w, tile=best.tile, interpret=True)
+    run = gemm.plan((m, n, k), backend="pallas", dtype="f32",
+                    tile=best.selection)
+    got = run.execute(x, w, interpret=True)
     err = float(jnp.max(jnp.abs(got - gemm_ref(x, w))))
     print(f"  kernel vs oracle max|err| = {err:.2e} on {m}x{n}x{k} slice")
+    print(f"  plan cache: {gemm.plan_cache_stats()}")
 
 
 if __name__ == "__main__":

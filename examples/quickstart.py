@@ -12,28 +12,39 @@ import jax
 import jax.numpy as jnp
 
 # ---------------------------------------------------------------------------
-# 1. The paper: simulate blocked-GEMM variants on the GAP8 edge processor
+# 1. The paper: plan blocked-GEMM variants on the GAP8 edge processor
 # ---------------------------------------------------------------------------
-from repro.core import GAP8_FC, Problem, Variant, best_microkernel
+from repro import gemm
+from repro.core import Variant
 
 print("=== 1. Paper simulator: MobileNetV1 layer #10 GEMM on GAP8 ===")
-layer10 = Problem(m=256, n=784, k=2304)          # im2col of conv layer 10
+print(f"  backends: {gemm.backends()}")
+layer10 = (256, 784, 2304)                       # im2col of conv layer 10
 for v in Variant:
-    cb = best_microkernel(GAP8_FC, v, layer10)
+    cb = gemm.plan(layer10, backend="analytic-gap8", variant=v).estimate()
     print(f"  {v.value}: best micro-kernel {cb.micro_kernel}, "
           f"estimated {cb.total:.3f}s "
           f"(arith {cb.arith:.3f}s, transfers {cb.transfer:.3f}s)")
 
 # ---------------------------------------------------------------------------
-# 2. The TPU adaptation: TileTuner picks Pallas block shapes analytically
+# 2. The TPU adaptation: the same plan() call picks Pallas block shapes
 # ---------------------------------------------------------------------------
-from repro.core import GemmShape, tune
-
 print("\n=== 2. TileTuner: a transformer MLP GEMM on TPU v5e ===")
-d = tune(GemmShape(m=4096, n=18944, k=3584, dtype="bf16"))  # qwen2-7b w_up
-print(f"  tile {d.tile} -> predicted {d.seconds*1e6:.0f}us, "
+d = gemm.plan((4096, 18944, 3584), backend="analytic-tpu")  # qwen2-7b w_up
+print(f"  tile {d.selection} -> predicted {d.predicted_seconds*1e6:.0f}us, "
       f"{d.cost.roofline_fraction():.1%} of roofline "
       f"(paper-mode/no-overlap would be {d.cost.total_no_overlap*1e6:.0f}us)")
+
+# ---------------------------------------------------------------------------
+# 2b. Close the loop: execute a plan with the Pallas kernel (interpret mode)
+# ---------------------------------------------------------------------------
+print("\n=== 2b. plan -> execute on the pallas backend ===")
+p = gemm.plan((256, 256, 256), backend="pallas", dtype="f32")
+a = jnp.ones((256, 256), jnp.float32)
+b = jnp.full((256, 256), 0.5, jnp.float32)
+c = p.execute(a, b, interpret=True)
+print(f"  {p.describe()}")
+print(f"  execute(ones, halves)[0,0] = {float(c[0, 0])} (expect 128.0)")
 
 # ---------------------------------------------------------------------------
 # 3. The framework: train a small LM for a few steps on CPU

@@ -10,6 +10,11 @@ Public surface:
   autotune   — TileTuner: analytical BlockSpec selection + manifest
   roofline   — 3-term roofline from compiled HLO
   calibrate  — the paper's calibration methodology, runnable on any host
+
+NOTE: consumers should plan GEMMs through the unified façade
+``repro.gemm.plan(...)`` rather than calling ``best_microkernel`` / ``tune``
+directly; these remain public as the implementation layer the registered
+backends dispatch to.
 """
 from repro.core.hardware import GAP8_FC, TPU_V5E, MachineSpec, get_machine
 from repro.core.simulator import CostBreakdown, best_microkernel, simulate

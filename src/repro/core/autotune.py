@@ -150,13 +150,13 @@ class Manifest:
         return len(self._entries)
 
 
-def model_gemm_shapes(cfg) -> list[GemmShape]:
+def model_gemm_shapes(cfg, tokens: int = 4096) -> list[GemmShape]:
     """Enumerate the GEMM shapes of one transformer architecture config —
     the per-arch workload TileTuner optimises (the MobileNetV1-Table-2
-    analogue for our assigned architectures)."""
+    analogue for our assigned architectures).  ``tokens`` is the per-chip
+    token tile (a representative M; serving passes its decode batch)."""
     d = cfg.d_model
     shapes = []
-    tokens = 4096  # per-chip token tile; a representative M
     q = cfg.n_heads * cfg.head_dim
     kv = cfg.n_kv_heads * cfg.head_dim
     shapes.append(GemmShape(tokens, q + 2 * kv, d, dtype="bf16"))   # QKV

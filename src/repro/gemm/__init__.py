@@ -1,0 +1,44 @@
+"""``repro.gemm`` — one façade over the analytic simulators and kernels.
+
+The paper's predict→choose→run loop as a first-class API:
+
+    >>> from repro import gemm
+    >>> gemm.backends()
+    ['analytic-gap8', 'analytic-tpu', 'pallas', 'reference']
+    >>> p = gemm.plan((512, 2048, 1024), backend="pallas", dtype="f32")
+    >>> p.estimate().total()        # predicted seconds (TPU cost model)
+    >>> c = p.execute(a, b, interpret=True)   # tuned Pallas kernel
+
+See ``api.py`` for the plan/problem types, ``registry.py`` for the backend
+protocol, ``backends.py`` for the built-ins, ``cache.py`` for memoisation +
+manifest persistence.
+"""
+from repro.gemm.api import (
+    GemmPlan,
+    GemmProblem,
+    NotExecutableError,
+    UnknownBackendError,
+    VariantChoice,
+)
+from repro.gemm.backends import dtype_tag
+from repro.gemm.planner import (
+    backends,
+    clear_plan_cache,
+    default_execute_backend,
+    grouped_matmul,
+    matmul,
+    plan,
+    plan_cache_stats,
+    plan_model_gemms,
+    save_cache,
+    warm_cache,
+)
+from repro.gemm.registry import Backend, get_backend, register_backend
+
+__all__ = [
+    "Backend", "GemmPlan", "GemmProblem", "NotExecutableError",
+    "UnknownBackendError", "VariantChoice",
+    "backends", "clear_plan_cache", "default_execute_backend", "dtype_tag",
+    "get_backend", "grouped_matmul", "matmul", "plan", "plan_cache_stats",
+    "plan_model_gemms", "register_backend", "save_cache", "warm_cache",
+]

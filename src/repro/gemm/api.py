@@ -1,0 +1,179 @@
+"""The unified plan/execute GEMM API — the paper's workflow as one façade.
+
+The paper's contribution is *simulate-before-implement*: an analytic cost
+model predicts which GEMM variant/tiling wins before anything runs on
+hardware.  This module makes that predict→choose→run loop a first-class
+citizen:
+
+    plan = repro.gemm.plan((m, n, k), backend="analytic-tpu")
+    plan.estimate()            # the predicted TpuCost / CostBreakdown
+    plan.execute(a, b)         # NotExecutableError: analytic-only backend
+
+    plan = repro.gemm.plan((m, n, k), backend="pallas", dtype="bf16")
+    c = plan.execute(a, b, interpret=True)   # tuned Pallas kernel
+
+Every backend (``repro.gemm.backends()``) maps a :class:`GemmProblem` to a
+frozen :class:`GemmPlan` carrying the chosen variant-or-tile, the predicted
+cost, and provenance describing how the choice was made.  Plans are memoised
+in a process-level cache (``repro.gemm.cache``) whose persistence layer is
+TileTuner's JSON manifest.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Mapping
+
+from repro.core.hardware import MachineSpec, get_machine
+from repro.core.simulator import CostBreakdown
+from repro.core.tpu_model import DTYPE_BYTES, GemmShape, TpuCost
+from repro.core.variants import Blocking, MicroKernel, Problem, Variant
+
+
+class NotExecutableError(RuntimeError):
+    """Raised when ``execute`` is called on an analytic-only plan."""
+
+
+class UnknownBackendError(KeyError):
+    """Raised for a backend name absent from the registry."""
+
+
+@dataclasses.dataclass(frozen=True)
+class GemmProblem:
+    """Canonical description of one GEMM ``C (+)= A (m x k) . B (k x n)``."""
+
+    m: int
+    n: int
+    k: int
+    dtype: str = "bf16"
+    accumulate: bool = False
+
+    def __post_init__(self):
+        if min(self.m, self.n, self.k) < 1:
+            raise ValueError(f"degenerate GEMM problem {self}")
+        if self.dtype not in DTYPE_BYTES:
+            raise ValueError(
+                f"unknown dtype {self.dtype!r}; have {sorted(DTYPE_BYTES)}")
+
+    @property
+    def flops(self) -> float:
+        return 2.0 * self.m * self.n * self.k
+
+    @property
+    def elem_bytes(self) -> int:
+        return DTYPE_BYTES[self.dtype]
+
+    def as_shape(self) -> GemmShape:
+        """The TPU cost-model view of this problem."""
+        return GemmShape(m=self.m, n=self.n, k=self.k, dtype=self.dtype,
+                         accumulate=self.accumulate)
+
+    def as_problem(self) -> Problem:
+        """The GAP8 simulator view of this problem."""
+        return Problem(m=self.m, n=self.n, k=self.k,
+                       elem_bytes=self.elem_bytes, dtype=self.dtype)
+
+    @classmethod
+    def coerce(cls, obj: Any, dtype: str | None = None,
+               default_dtype: str = "bf16") -> "GemmProblem":
+        """Accept a GemmProblem, (m, n, k) tuple, core Problem or GemmShape."""
+        if isinstance(obj, cls):
+            p = obj
+        elif isinstance(obj, GemmShape):
+            p = cls(obj.m, obj.n, obj.k, dtype=obj.dtype,
+                    accumulate=obj.accumulate)
+        elif isinstance(obj, Problem):
+            p = cls(obj.m, obj.n, obj.k, dtype=obj.dtype)
+        elif isinstance(obj, (tuple, list)) and len(obj) == 3:
+            p = cls(int(obj[0]), int(obj[1]), int(obj[2]),
+                    dtype=dtype or default_dtype)
+        else:
+            raise TypeError(
+                f"cannot interpret {obj!r} as a GEMM problem; pass a "
+                "GemmProblem, (m, n, k), core.variants.Problem or GemmShape")
+        if dtype is not None and p.dtype != dtype:
+            p = dataclasses.replace(p, dtype=dtype)
+        return p
+
+
+@dataclasses.dataclass(frozen=True)
+class VariantChoice:
+    """The GAP8 backends' selection: loop-order variant + micro-kernel."""
+    variant: Variant
+    micro_kernel: MicroKernel
+    blocking: Blocking
+
+    def __str__(self) -> str:
+        return f"{self.variant.value}/{self.micro_kernel}"
+
+
+@dataclasses.dataclass(frozen=True)
+class GemmPlan:
+    """A frozen predict→choose decision for one GEMM problem.
+
+    ``selection`` is backend-specific: a :class:`TileConfig` for the
+    TPU/Pallas backends, a :class:`VariantChoice` for the GAP8 simulator,
+    ``None`` for the reference backend.  ``cost`` is the backend's predicted
+    :class:`TpuCost` / :class:`CostBreakdown`.  ``provenance`` records how
+    the selection was made (search / cache / manifest / explicit override).
+    """
+
+    problem: GemmProblem
+    backend: str
+    machine: str
+    selection: Any
+    cost: TpuCost | CostBreakdown | None
+    provenance: Mapping[str, Any] = dataclasses.field(default_factory=dict)
+
+    def estimate(self) -> TpuCost | CostBreakdown:
+        """The predicted cost object this plan was chosen by."""
+        if self.cost is None:
+            raise ValueError(f"plan via {self.backend!r} carries no estimate")
+        return self.cost
+
+    @property
+    def predicted_seconds(self) -> float:
+        """Scalar predicted execution time (backend's headline estimate)."""
+        c = self.estimate()
+        if isinstance(c, TpuCost):
+            return c.total(bool(self.provenance.get("overlap", True)))
+        return c.total
+
+    @property
+    def executable(self) -> bool:
+        return _backend_of(self.backend).executable
+
+    def execute(self, a, b, c=None, *, interpret: bool = False,
+                force: bool = False):
+        """Run ``C (+)= A.B`` with this plan's selection.
+
+        Dispatches to the Pallas kernels (``pallas``) or the pure-jnp
+        reference (``reference``); analytic-only backends raise
+        :class:`NotExecutableError`.  ``force`` makes the pallas backend
+        attempt real (non-interpret) Pallas lowering even off-TPU.
+        """
+        return _backend_of(self.backend).execute(self, a, b, c,
+                                                 interpret=interpret,
+                                                 force=force)
+
+    def describe(self) -> str:
+        p, sel = self.problem, self.selection
+        cost = (f"{self.predicted_seconds * 1e6:.1f}us"
+                if self.cost is not None else "n/a")
+        return (f"GemmPlan[{self.backend}@{self.machine}] "
+                f"{p.m}x{p.n}x{p.k}:{p.dtype} -> "
+                f"{sel if sel is not None else 'as-is'} ({cost}, "
+                f"{self.provenance.get('source', 'search')})")
+
+
+def _backend_of(name: str):
+    from repro.gemm.registry import get_backend
+    return get_backend(name)
+
+
+def resolve_machine(machine: str | MachineSpec | None,
+                    default: str) -> MachineSpec:
+    if machine is None:
+        return get_machine(default)
+    if isinstance(machine, MachineSpec):
+        return machine
+    return get_machine(machine)

@@ -1,0 +1,136 @@
+"""``plan()`` — the single entry point of the predict→choose→run loop."""
+from __future__ import annotations
+
+import jax
+
+from repro.gemm.api import GemmPlan, GemmProblem, resolve_machine
+from repro.gemm.backends import dtype_tag, register_builtin_backends
+from repro.gemm.cache import PlanCache
+from repro.gemm.registry import backend_names, get_backend
+
+register_builtin_backends()
+
+_CACHE = PlanCache()
+
+
+def plan(problem, *, backend: str = "analytic-tpu", machine=None,
+         dtype: str | None = None, policy: str = "analytic",
+         cache: bool = True, **options) -> GemmPlan:
+    """Plan one GEMM: run ``backend``'s analytic model / search and freeze
+    the decision.
+
+    ``problem`` is a :class:`GemmProblem`, an ``(m, n, k)`` tuple, a
+    ``core.variants.Problem`` or a ``core.tpu_model.GemmShape``.  ``machine``
+    names a :class:`MachineSpec` (default: the backend's native target).
+    ``policy`` selects the partial-tile accounting of the GAP8 simulator
+    ("analytic" | "padded").  Backend-specific ``options``:
+
+    * ``analytic-gap8``: ``variant=``, ``micro_kernel=`` to pin the search;
+    * ``analytic-tpu`` / ``pallas``: ``overlap=`` (composition rule),
+      ``tile=`` to bypass the search with an explicit TileConfig.
+
+    Decisions are memoised process-wide (``cache=False`` forces a fresh
+    search); a manifest warmed via :func:`warm_cache` satisfies tile-backend
+    plans without searching.
+    """
+    b = get_backend(backend)
+    prob = b.coerce_problem(problem, dtype)
+    mspec = resolve_machine(machine, b.default_machine)
+    if not cache:
+        return b.make_plan(prob, mspec, policy, options)
+    key = _CACHE.key(prob, b.name, mspec.name, policy, options)
+    hit = _CACHE.get(key)
+    if hit is not None:
+        return hit
+    built = None
+    # The manifest persists only the default search (tile selected under
+    # overlap=True, no pinned options); requests with explicit options must
+    # re-search rather than inherit a tile chosen under different rules.
+    if not options:
+        tile = _CACHE.manifest_tile(prob)
+        if tile is not None:
+            built = b.plan_from_tile(prob, mspec, policy, tile)
+    if built is None:
+        built = b.make_plan(prob, mspec, policy, options)
+    _CACHE.put(key, built)
+    return built
+
+
+def backends() -> list[str]:
+    """Names of every registered GEMM backend."""
+    return backend_names()
+
+
+def clear_plan_cache() -> None:
+    _CACHE.clear()
+
+
+def plan_cache_stats() -> dict:
+    d = _CACHE.stats.as_dict()
+    d["size"] = len(_CACHE)
+    return d
+
+
+def warm_cache(manifest_path: str) -> int:
+    """Attach a TileTuner JSON manifest as the cache's persisted tier."""
+    return _CACHE.warm(manifest_path)
+
+
+def save_cache(manifest_path: str) -> int:
+    """Persist the cache's tile decisions to a TileTuner JSON manifest."""
+    return _CACHE.save(manifest_path)
+
+
+# ---------------------------------------------------------------------------
+# Convenience execution helpers for in-framework consumers.
+# ---------------------------------------------------------------------------
+
+
+def default_execute_backend() -> str:
+    """The executable backend matching the ambient jax platform: Pallas on
+    TPU, the jnp reference elsewhere (keeps 512-device SPMD lowering clean —
+    DESIGN.md §3)."""
+    return "pallas" if jax.default_backend() == "tpu" else "reference"
+
+
+def matmul(x, w, *, backend: str | None = None, interpret: bool = False):
+    """Planned matmul over arbitrary leading dims: ``(..., k) @ (k, n)``.
+
+    Folds leading dims into M, plans on the ambient executable backend and
+    executes the plan — the framework-wide route by which every dense layer
+    inherits the paper's analytic tile selection.
+    """
+    lead = x.shape[:-1]
+    a2 = x if x.ndim == 2 else x.reshape(-1, x.shape[-1])
+    m, k = a2.shape
+    n = w.shape[-1]
+    p = plan((m, n, k), backend=backend or default_execute_backend(),
+             dtype=dtype_tag(x.dtype))
+    out = p.execute(a2, w, interpret=interpret)
+    return out if x.ndim == 2 else out.reshape(*lead, n)
+
+
+def grouped_matmul(x, w, *, interpret: bool = False):
+    """Planned grouped (expert-batched) matmul: ``(..., E, C, D) @ (E, D, F)``.
+
+    Routes through ``kernels.ops.grouped_gemm`` (Pallas on TPU / interpret,
+    jnp reference elsewhere), vmapped over any extra leading batch dims.
+    """
+    from repro.kernels import ops
+    if x.ndim == 3:
+        return ops.grouped_gemm(x, w, interpret=interpret)
+    lead = x.shape[:-3]
+    x4 = x.reshape((-1,) + x.shape[-3:])
+    out = jax.vmap(lambda xb: ops.grouped_gemm(xb, w, interpret=interpret))(x4)
+    return out.reshape(lead + out.shape[-3:])
+
+
+def plan_model_gemms(cfg, *, tokens: int = 4096,
+                     backend: str = "analytic-tpu",
+                     **plan_kwargs) -> list[GemmPlan]:
+    """Plans for every GEMM shape of one transformer architecture config —
+    the per-arch workload view (serving/benchmarks consume this instead of
+    calling TileTuner directly)."""
+    from repro.core.autotune import model_gemm_shapes
+    shapes = model_gemm_shapes(cfg, tokens=tokens)
+    return [plan(s, backend=backend, **plan_kwargs) for s in shapes]

@@ -1,0 +1,12 @@
+"""Version shims for the Pallas TPU API.
+
+``pltpu.TPUCompilerParams`` was renamed ``pltpu.CompilerParams`` in newer
+jax releases; the kernels import the alias from here so they run on both.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams",
+                         getattr(pltpu, "TPUCompilerParams", None))
+assert CompilerParams is not None, "no Pallas TPU CompilerParams class found"

@@ -1,27 +1,27 @@
 """Public jit'd wrappers for the Pallas kernels.
 
-``matmul`` / ``grouped_gemm`` / ``flash_attention`` dispatch on backend:
+``matmul`` routes through the unified plan/execute API (``repro.gemm``): it
+plans on the ``pallas`` backend — the paper's analytical tile selection,
+memoised in the process-level plan cache — and executes the frozen plan.
+``grouped_gemm`` / ``flash_attention`` dispatch on backend directly:
 
 * on TPU (``jax.default_backend() == 'tpu'``) or with ``interpret=True``
-  they run the Pallas kernels with tiles chosen by TileTuner — the paper's
-  analytical selection applied at call time;
+  they run the Pallas kernels;
 * otherwise (CPU container, 512-device dry-run) they fall back to the
   pure-jnp reference path so XLA-native SPMD lowering stays clean
   (DESIGN.md §3).
 
-Padding to tile multiples happens here (zero K-padding is mathematically
-exact; M/N padding is sliced off).
+Padding to tile multiples happens inside the pallas backend's execute (zero
+K-padding is mathematically exact; M/N padding is sliced off).
 """
 from __future__ import annotations
 
-import functools
+import warnings
 
 import jax
-import jax.numpy as jnp
 
-from repro.core.autotune import tune
-from repro.core.tpu_model import GemmShape, GridOrder, TileConfig
-from repro.kernels import gemm as gemm_kernel
+from repro import gemm as gemm_api
+from repro.core.tpu_model import GridOrder, TileConfig
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention_fwd
 from repro.kernels.grouped_gemm import grouped_gemm_kernel
@@ -31,18 +31,14 @@ def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
-def _pad_to(x, mults):
-    pads = [(0, (m - d % m) % m) for d, m in zip(x.shape, mults)]
-    if any(p[1] for p in pads):
-        return jnp.pad(x, pads), True
-    return x, False
-
-
 def pick_tile(m: int, n: int, k: int, dtype: str,
               order: GridOrder | None = None) -> TileConfig:
-    """TileTuner decision for a GEMM shape (cached)."""
-    d = tune(GemmShape(m, n, k, dtype))
-    t = d.tile
+    """Deprecated shim: use ``repro.gemm.plan(...).selection`` instead."""
+    warnings.warn(
+        "kernels.ops.pick_tile is deprecated; use "
+        "repro.gemm.plan((m, n, k), backend='analytic-tpu').selection",
+        DeprecationWarning, stacklevel=2)
+    t = gemm_api.plan((m, n, k), backend="analytic-tpu", dtype=dtype).selection
     if order is not None and t.order is not order:
         t = TileConfig(t.bm, t.bn, t.bk, order)
     return t
@@ -50,20 +46,18 @@ def pick_tile(m: int, n: int, k: int, dtype: str,
 
 def matmul(a, b, *, tile: TileConfig | None = None,
            interpret: bool = False, force_pallas: bool = False):
-    """C = A @ B through the tuned Pallas kernel (TPU) or jnp (elsewhere)."""
+    """C = A @ B through the planned Pallas kernel (TPU) or jnp (elsewhere).
+
+    The TPU/interpret-vs-reference dispatch lives in one place: the pallas
+    backend's ``execute`` (off-TPU without interpret it runs the jnp
+    reference), so every call routes through the plan cache.
+    """
     m, k = a.shape
     n = b.shape[1]
-    if not (_on_tpu() or interpret or force_pallas):
-        return ref.gemm_ref(a, b)
-    dtype = {jnp.dtype(jnp.bfloat16): "bf16", jnp.dtype(jnp.float32): "f32",
-             jnp.dtype(jnp.int8): "int8"}.get(jnp.dtype(a.dtype), "bf16")
-    t = tile or pick_tile(m, n, k, dtype)
-    bm, bn, bk = min(t.bm, m), min(t.bn, n), min(t.bk, k)
-    ap, _ = _pad_to(a, (bm, bk))
-    bp, _ = _pad_to(b, (bk, bn))
-    out = gemm_kernel.gemm(ap, bp, tile=TileConfig(bm, bn, bk, t.order),
-                           interpret=interpret)
-    return out[:m, :n]
+    options = {} if tile is None else {"tile": tile}
+    plan = gemm_api.plan((m, n, k), backend="pallas",
+                         dtype=gemm_api.dtype_tag(a.dtype), **options)
+    return plan.execute(a, b, interpret=interpret, force=force_pallas)
 
 
 def grouped_gemm(x, w, *, block_c: int = 128, block_f: int = 128,

@@ -38,7 +38,7 @@ from repro.configs import (
     skipped_cells,
 )
 from repro.configs.base import SHAPES, TrainConfig
-from repro.core.roofline import collective_bytes
+from repro.core.roofline import collective_bytes, cost_analysis_dict
 from repro.launch.mesh import make_production_mesh
 from repro.models.model import LM
 from repro.runtime.serve_lib import (
@@ -51,6 +51,7 @@ from repro.runtime.sharding import (
     default_parallel,
     mesh_info,
     shardings_for,
+    use_mesh,
 )
 from repro.runtime.train_lib import abstract_train_state, make_train_step
 
@@ -79,7 +80,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
     key = jax.random.key(0)
     t0 = time.time()
 
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         if shape.kind == "train":
             params, pspecs, opt, ospecs = abstract_train_state(lm, tcfg, key)
             bspecs = batch_specs(cfg, shape, minfo)
@@ -140,7 +141,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
 
         compiled = lowered.compile()
 
-    cost = compiled.cost_analysis() or {}
+    cost = cost_analysis_dict(compiled)
     mem = compiled.memory_analysis()
     hlo = compiled.as_text()
     coll = collective_bytes(hlo)

@@ -1,9 +1,10 @@
 """Core layers: norms, rotary embeddings, MLPs, embedding / logits heads.
 
-All matmul-shaped operations route through ``repro.kernels.ops.matmul`` so
-the TileTuner decisions (the paper's technique) apply framework-wide; on the
-CPU/dry-run path that wrapper falls back to ``jnp.einsum`` (XLA-native),
-keeping 512-device SPMD lowering clean (DESIGN.md §3).
+All matmul-shaped operations route through the unified plan/execute API
+(``repro.gemm.matmul``) so the analytic tile decisions (the paper's
+technique) apply framework-wide; on the CPU/dry-run path the planner picks
+the ``reference`` backend (XLA-native jnp dot), keeping 512-device SPMD
+lowering clean (DESIGN.md §3).
 """
 from __future__ import annotations
 
@@ -11,6 +12,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro import gemm as gemm_api
 from repro.models.common import (
     MeshInfo,
     Param,
@@ -91,14 +93,14 @@ def init_mlp(key, cfg, mesh: MeshInfo, dtype, d_ff: int | None = None):
 
 
 def apply_mlp(params, x, cfg):
-    up = x @ params["w_up"]
+    up = gemm_api.matmul(x, params["w_up"])
     if cfg.act == "swiglu":
-        h = jax.nn.silu(x @ params["w_gate"]) * up
+        h = jax.nn.silu(gemm_api.matmul(x, params["w_gate"])) * up
     elif cfg.act == "geglu":
-        h = jax.nn.gelu(x @ params["w_gate"]) * up
+        h = jax.nn.gelu(gemm_api.matmul(x, params["w_gate"])) * up
     else:
         h = jax.nn.gelu(up)
-    return h @ params["w_down"]
+    return gemm_api.matmul(h, params["w_down"])
 
 
 # ---------------------------------------------------------------------------
@@ -125,9 +127,9 @@ def embed_tokens(params, token_ids, cfg):
 def logits_head(params, x, cfg):
     """x: (..., d) -> (..., padded_vocab); soft-capped if configured."""
     if cfg.tie_embeddings:
-        logits = x @ params["table"].T
+        logits = gemm_api.matmul(x, params["table"].T)
     else:
-        logits = x @ params["unembed"]
+        logits = gemm_api.matmul(x, params["unembed"])
     if cfg.logit_softcap:
         c = cfg.logit_softcap
         logits = c * jnp.tanh(logits / c)

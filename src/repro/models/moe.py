@@ -23,6 +23,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro import gemm as gemm_api
 from repro.models.common import MeshInfo, dense_init
 
 
@@ -133,10 +134,20 @@ def apply_moe(params, x, cfg, mesh: MeshInfo | None = None):
         buf = _constrain(buf, mesh, P(mesh.dp(), e_ax, None, None))
 
     # --- expert FFN (SwiGLU), batched over experts ------------------------
-    g = jnp.einsum("becd,edf->becf", buf, params["w_gate"])
-    u = jnp.einsum("becd,edf->becf", buf, params["w_up"])
-    h = jax.nn.silu(g) * u
-    out_buf = jnp.einsum("becf,efd->becd", h, params["w_down"])
+    if mesh is None or (mesh.data == 1 and mesh.model == 1):
+        # single host: route through the unified GEMM API (planned grouped
+        # kernels — the shape class the paper's TileTuner optimises).
+        g = gemm_api.grouped_matmul(buf, params["w_gate"])
+        u = gemm_api.grouped_matmul(buf, params["w_up"])
+        h = jax.nn.silu(g) * u
+        out_buf = gemm_api.grouped_matmul(h, params["w_down"])
+    else:
+        # under a real mesh the einsum form stays: the SPMD partitioner
+        # sees one op to shard over the expert axis.
+        g = jnp.einsum("becd,edf->becf", buf, params["w_gate"])
+        u = jnp.einsum("becd,edf->becf", buf, params["w_up"])
+        h = jax.nn.silu(g) * u
+        out_buf = jnp.einsum("becf,efd->becd", h, params["w_down"])
     if mesh is not None:
         out_buf = _constrain(out_buf, mesh,
                              P(mesh.dp(), mesh.shard_if(e), None, None))
@@ -242,10 +253,15 @@ def apply_moe_ep(params, x, cfg, mesh: MeshInfo):
         return y.astype(xs.dtype), aux
 
     from jax.experimental.shard_map import shard_map
+    from repro.runtime.sharding import ambient_mesh
+    mesh_ctx = ambient_mesh()
+    if mesh_ctx is None:
+        raise RuntimeError(
+            "apply_moe_ep needs an ambient mesh; wrap the call in "
+            "`with repro.runtime.sharding.use_mesh(mesh):`")
     fn = shard_map(
         body,
-        mesh=jax.sharding.get_abstract_mesh()
-        if hasattr(jax.sharding, "get_abstract_mesh") else None,
+        mesh=mesh_ctx,
         in_specs=(P(), P(mesh.model_axis, None, None),
                   P(mesh.model_axis, None, None),
                   P(mesh.model_axis, None, None),

@@ -19,6 +19,7 @@ from typing import Any, Callable
 import jax
 import jax.numpy as jnp
 
+from repro import gemm as gemm_api
 from repro.configs.base import ModelConfig
 from repro.models.common import split_params
 from repro.models.model import LM
@@ -64,6 +65,22 @@ class ServingEngine:
         self._prefill = {}
         self._insert = jax.jit(self._insert_impl, static_argnums=(2,),
                                donate_argnums=(0,))
+        # Frozen GEMM plans for this engine's decode workload (M = the slot
+        # pool size): the paper's predict-before-run loop applied to serving,
+        # surfaced through perf_report().  On TPU the decode step's pallas
+        # plans reach the same tiles through TileTuner's shared search cache.
+        self.gemm_plans = gemm_api.plan_model_gemms(
+            lm.cfg, tokens=max_batch, backend="analytic-tpu")
+
+    def perf_report(self) -> dict:
+        """Predicted per-decode-step GEMM cost from the frozen plans."""
+        total = sum(p.predicted_seconds for p in self.gemm_plans)
+        return {
+            "predicted_gemm_seconds_per_step": total,
+            "predicted_tokens_per_second":
+                (self.max_batch / total) if total else float("inf"),
+            "plans": [p.describe() for p in self.gemm_plans],
+        }
 
     # -- jitted pieces --------------------------------------------------------
     def _decode_impl(self, params, caches, tokens, pos_vec, active):

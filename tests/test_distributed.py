@@ -23,7 +23,7 @@ from repro.models.moe import (
     init_moe,
     padded_experts,
 )
-from repro.runtime.sharding import batch_specs, mesh_info
+from repro.runtime.sharding import batch_specs, mesh_info, use_mesh
 
 pytestmark = pytest.mark.skipif(
     len(jax.devices()) < 8, reason="needs >=8 host devices")
@@ -45,7 +45,7 @@ def test_moe_ep_matches_baseline_exactly():
     x = jax.random.normal(jax.random.key(1), (4, 16, cfg.d_model),
                           jnp.float32)
     assert ep_applicable(cfg, minfo, 16)
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         y1, _ = jax.jit(lambda v, x: apply_moe(v, x, cfg, minfo))(values, x)
         y2, _ = jax.jit(lambda v, x: apply_moe_ep(v, x, cfg, minfo))(values, x)
     np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
@@ -66,7 +66,7 @@ def test_moe_ep_grads_match_baseline():
         y, aux = fn(v, x, cfg, minfo)
         return jnp.sum(jnp.square(y.astype(jnp.float32)))
 
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         g1 = jax.jit(jax.grad(lambda v: loss(apply_moe, v)))(values)
         g2 = jax.jit(jax.grad(lambda v: loss(apply_moe_ep, v)))(values)
     for a, b in zip(jax.tree.leaves(g1), jax.tree.leaves(g2), strict=True):
@@ -92,7 +92,7 @@ def test_expert_padding_exact():
     x = jax.random.normal(jax.random.key(2), (2, 8, cfg.d_model), jnp.float32)
     y_host, _ = apply_moe(v_host, x, cfg, None)
     mesh = _mesh24()
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         y_pad, _ = jax.jit(lambda v, x: apply_moe(v, x, cfg, minfo_pad)
                            )(v_pad, x)
     np.testing.assert_allclose(np.asarray(y_pad), np.asarray(y_host),
@@ -129,7 +129,7 @@ def test_sharded_train_step_runs():
     lm = LM(cfg, minfo)
     tcfg = TrainConfig(lr=3e-3, warmup_steps=2, total_steps=10)
     shape = ShapeConfig("t", "train", 32, 8)
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         params, pspecs, opt, ospecs = init_train_state(lm, tcfg,
                                                        jax.random.key(0))
         params = jax.device_put(params, shardings_for(mesh, pspecs))

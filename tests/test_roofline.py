@@ -4,6 +4,7 @@ import pytest
 from repro.core.roofline import (
     RooflineReport,
     collective_bytes,
+    cost_analysis_dict,
     from_compiled,
     shape_bytes,
 )
@@ -91,7 +92,7 @@ def test_cost_analysis_is_per_device():
     a = jax.ShapeDtypeStruct((n, 128), jnp.float32, sharding=sh)
     w = jax.ShapeDtypeStruct((128, 128), jnp.float32)
     c = jax.jit(lambda a, w: a @ w, in_shardings=(sh, None)).lower(a, w).compile()
-    flops = c.cost_analysis()["flops"]
+    flops = cost_analysis_dict(c)["flops"]
     per_dev = 2 * (n // len(jax.devices())) * 128 * 128
     assert flops == pytest.approx(per_dev, rel=0.05)
 
