@@ -1,0 +1,144 @@
+"""Planner-throughput benchmark: scalar loops vs the batched sweep engine.
+
+The design-space search is the repo's hottest non-JAX path: TileTuner walks
+up to ~810 candidate tiles per GEMM shape and the GAP8 simulator scores 14
+micro-kernels x 3 variants per layer.  This benchmark times the pre-batching
+scalar loops (``tune_scalar`` / ``best_microkernel_scalar``, the preserved
+reference oracles) against the vectorized batch engine on the combined
+Table-2 + all-arch planning workload, asserts the selections are identical,
+and records the speedups.
+
+Workloads:
+
+  table2_gap8  the paper's Table-2 grid — 19 MobileNetV1 layers x 3
+               variants; scalar = per-candidate ``simulate`` loop, batched =
+               ``best_microkernel_batch`` per variant.
+  allarch_tpu  every arch config's GEMM shapes through TileTuner; scalar =
+               per-shape ``candidate_tiles`` + ``estimate`` loop, batched =
+               one deduped ``tune_batch`` lattice evaluation.
+  cold_tune    single-shape planning latency (scalar loop vs 1-shape batch).
+
+Writes ``BENCH_planner.json`` at the repo root and prints it; CI runs this
+script so planner-performance regressions are visible in the log.
+
+  PYTHONPATH=src python benchmarks/bench_planner.py
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.configs import ARCH_IDS, get_config
+from repro.core.autotune import (
+    clear_tune_cache,
+    model_gemm_shapes,
+    tune_batch,
+    tune_scalar,
+)
+from repro.core.hardware import GAP8_FC
+from repro.core.mobilenet import TABLE2
+from repro.core.simulator import (
+    best_microkernel_batch,
+    best_microkernel_scalar,
+)
+from repro.core.variants import Variant
+
+OUT_PATH = os.path.join(os.path.dirname(__file__), "..",
+                        "BENCH_planner.json")
+
+
+def _best_of(fn, reps=3):
+    times = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        out = fn()
+        times.append(time.perf_counter() - t0)
+    return out, min(times)
+
+
+def bench_table2_gap8() -> dict:
+    probs = [row.problem for row in TABLE2]
+
+    def scalar():
+        return [[best_microkernel_scalar(GAP8_FC, v, p) for p in probs]
+                for v in Variant]
+
+    def batched():
+        return [best_microkernel_batch(GAP8_FC, v, probs) for v in Variant]
+
+    s_out, s_t = _best_of(scalar)
+    b_out, b_t = _best_of(batched)
+    for srow, brow in zip(s_out, b_out):
+        for s, b in zip(srow, brow):
+            assert s.micro_kernel == b.micro_kernel, "selection drift"
+    return {"scalar_s": s_t, "batched_s": b_t, "speedup": s_t / b_t,
+            "problems": len(probs), "grid_points": len(probs) * 3}
+
+
+def bench_allarch_tpu() -> dict:
+    shapes = []
+    for arch in ARCH_IDS:
+        shapes += model_gemm_shapes(get_config(arch))
+    unique = list(dict.fromkeys(shapes))
+
+    def scalar():
+        return [tune_scalar(s) for s in unique]
+
+    def batched():
+        clear_tune_cache()  # cold: time the lattice evaluation, not the memo
+        return tune_batch(shapes)
+
+    s_out, s_t = _best_of(scalar)
+    b_out, b_t = _best_of(batched)
+    got = {s: d.tile for s, d in zip(shapes, b_out)}
+    for s, d in zip(unique, s_out):
+        assert got[s] == d.tile, f"selection drift on {s}"
+    return {"scalar_s": s_t, "batched_s": b_t, "speedup": s_t / b_t,
+            "shapes": len(shapes), "unique_shapes": len(unique)}
+
+
+def bench_cold_tune() -> dict:
+    from repro.core.tpu_model import GemmShape
+    shape = GemmShape(4096, 11008, 4096, "bf16")
+    _, s_t = _best_of(lambda: tune_scalar(shape), reps=5)
+
+    def batched():
+        clear_tune_cache()
+        return tune_batch([shape])
+
+    _, b_t = _best_of(batched, reps=5)
+    return {"scalar_s": s_t, "batched_s": b_t, "speedup": s_t / b_t}
+
+
+def main() -> None:
+    table2 = bench_table2_gap8()
+    allarch = bench_allarch_tpu()
+    cold = bench_cold_tune()
+    combined_scalar = table2["scalar_s"] + allarch["scalar_s"]
+    combined_batched = table2["batched_s"] + allarch["batched_s"]
+    report = {
+        "workloads": {
+            "table2_gap8": table2,
+            "allarch_tpu": allarch,
+            "cold_tune": cold,
+        },
+        "combined": {
+            "scalar_s": combined_scalar,
+            "batched_s": combined_batched,
+            "speedup": combined_scalar / combined_batched,
+        },
+    }
+    with open(OUT_PATH, "w") as f:
+        json.dump(report, f, indent=1, sort_keys=True)
+    print(json.dumps(report, indent=1, sort_keys=True))
+    print(f"\ncombined Table-2 + all-arch speedup: "
+          f"{report['combined']['speedup']:.1f}x "
+          f"(written to {os.path.abspath(OUT_PATH)})")
+
+
+if __name__ == "__main__":
+    main()

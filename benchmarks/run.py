@@ -45,44 +45,59 @@ def _timed(fn, reps=3):
 
 
 def bench_fig4() -> list[str]:
-    """B3C2A0 decomposition for 4x4 / 4x8 / 4x12 (paper Fig. 4, <2% claim)."""
+    """B3C2A0 decomposition for 4x4 / 4x8 / 4x12 (paper Fig. 4, <2% claim).
+    One bulk ``sweep`` over the micro-kernel axis replaces the per-mk plan
+    loop."""
+    mks = (MicroKernel(4, 4), MicroKernel(4, 8), MicroKernel(4, 12))
+    res, us = _timed(lambda: gemm_api.sweep(
+        [LAYER10], backends=["analytic-gap8"], variants=[Variant.B3C2A0],
+        micro_kernels=mks, cache=False))
     rows = []
     detail = ["  fig4 detail: mk, packing, unpacking, copy, stream_M, "
               "stream_L1, stream_L2, arith, total(s)"]
-    for mk in (MicroKernel(4, 4), MicroKernel(4, 8), MicroKernel(4, 12)):
-        cb, us = _timed(lambda mk=mk: _gap8_plan(
-            LAYER10, Variant.B3C2A0, mk, cache=False).estimate())
+    for r in res:
+        cb = r.plan.estimate()
         g = cb.grouped()
-        rows.append(f"fig4_B3C2A0_{mk},{us:.1f},{cb.total:.4f}")
+        rows.append(f"fig4_B3C2A0_{r.micro_kernel},{us / len(res):.1f},"
+                    f"{cb.total:.4f}")
         detail.append(
-            f"  {mk}: {g['packing']:.3f}, {g['unpacking']:.3f}, "
+            f"  {r.micro_kernel}: {g['packing']:.3f}, {g['unpacking']:.3f}, "
             f"{g['copy']:.3f}, {g['stream_M']:.3f}, {g['stream_L1']:.3f}, "
             f"{g['stream_L2']:.3f}, {g['arith']:.3f}, {cb.total:.3f}")
     return rows + detail
 
 
 def bench_fig5() -> list[str]:
-    """Layer-10 sweep: per-variant best micro-kernel + time (paper Fig. 5)."""
+    """Layer-10 sweep: per-variant best micro-kernel + time (paper Fig. 5),
+    one bulk ``sweep`` over the variant axis."""
+    res, us = _timed(lambda: gemm_api.sweep(
+        [LAYER10], backends=["analytic-gap8"], variants=list(Variant),
+        cache=False))
     rows = []
-    for v in Variant:
-        cb, us = _timed(lambda v=v: _gap8_plan(LAYER10, v,
-                                               cache=False).estimate())
-        rows.append(f"fig5_{v.value},{us:.1f},{cb.total:.4f}")
-        rows.append(f"  fig5 detail: {v.value} best={cb.micro_kernel} "
+    for r in res:
+        cb = r.plan.estimate()
+        rows.append(f"fig5_{r.variant},{us / len(res):.1f},{cb.total:.4f}")
+        rows.append(f"  fig5 detail: {r.variant} best={cb.micro_kernel} "
                     f"blocking=(m_c={cb.blocking.m_c} n_c={cb.blocking.n_c} "
                     f"k_c={cb.blocking.k_c})")
     return rows
 
 
 def bench_table2() -> list[str]:
-    """Optimal micro-kernels for all MobileNetV1 layers vs paper Table 2."""
+    """Optimal micro-kernels for all MobileNetV1 layers vs paper Table 2 —
+    the full (layer x variant) grid in one bulk ``sweep``."""
+    probs = [row.problem for row in TABLE2]
+    t0 = time.perf_counter()
+    res = gemm_api.sweep(probs, backends=["analytic-gap8"],
+                         variants=list(Variant), cache=False)
+    us = (time.perf_counter() - t0) * 1e6 / len(TABLE2)
+    by_variant = {v: res.filter(variant=v.value) for v in Variant}
     agree = {v: 0 for v in Variant}
     detail = []
-    t0 = time.perf_counter()
-    for row in TABLE2:
+    for i, row in enumerate(TABLE2):
         cells = []
         for v in Variant:
-            cb = _gap8_plan(row.problem, v, cache=False).estimate()
+            cb = by_variant[v][i].plan.estimate()
             paper = row.best[v.value]
             ok = (cb.micro_kernel.rows, cb.micro_kernel.cols) == \
                  (paper.rows, paper.cols)
@@ -90,7 +105,6 @@ def bench_table2() -> list[str]:
             mark = "=" if ok else "!"
             cells.append(f"{v.value}:{cb.micro_kernel}{mark}{paper}")
         detail.append(f"  L{row.layer:>14} " + "  ".join(cells))
-    us = (time.perf_counter() - t0) * 1e6 / len(TABLE2)
     total = sum(agree.values())
     rows = [f"table2_agreement,{us:.1f},{total}/57"]
     for v in Variant:
@@ -172,7 +186,7 @@ def main() -> None:
             print(line)
     stats = gemm_api.plan_cache_stats()
     print(f"plan_cache,0,hits={stats['hits']}:misses={stats['misses']}"
-          f":size={stats['size']}")
+          f":deduped={stats['deduped']}:size={stats['size']}")
 
 
 if __name__ == "__main__":

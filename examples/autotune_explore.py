@@ -29,15 +29,20 @@ def main() -> None:
     a = ap.parse_args()
 
     print(f"GEMM {a.m} x {a.n} x {a.k}")
-    print("\n--- GAP8 (the paper's target): algorithmic variants ---")
-    for v in Variant:
-        cb = gemm.plan((a.m, a.n, a.k), backend="analytic-gap8",
-                       variant=v).estimate()
+    print("\n--- GAP8 (the paper's target): bulk sweep over the variant "
+          "axis ---")
+    res = gemm.sweep([(a.m, a.n, a.k)], backends=["analytic-gap8"],
+                     variants=list(Variant), policies=["analytic", "padded"])
+    for r in res.filter(policy="analytic"):
+        cb = r.plan.estimate()
         g = cb.grouped()
-        print(f"  {v.value}: mk={cb.micro_kernel} total={cb.total:.3f}s  "
+        print(f"  {r.variant}: mk={cb.micro_kernel} total={cb.total:.3f}s  "
               f"[pack {g['packing']:.2f} | copy {g['copy']:.2f} | "
               f"streams {g['stream_M'] + g['stream_L1'] + g['stream_L2']:.2f} "
               f"| arith {g['arith']:.2f}]")
+    win = res.best((a.m, a.n, a.k))
+    print(f"  sweep winner across {len(res)} grid points: {win.variant} "
+          f"{win.selection} ({win.policy} policy, {win.seconds:.3f}s)")
 
     print("\n--- TPU v5e: the analytic search over the Pallas design space ---")
     shape = GemmShape(a.m, a.n, a.k, "bf16")

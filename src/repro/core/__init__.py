@@ -17,23 +17,41 @@ directly; these remain public as the implementation layer the registered
 backends dispatch to.
 """
 from repro.core.hardware import GAP8_FC, TPU_V5E, MachineSpec, get_machine
-from repro.core.simulator import CostBreakdown, best_microkernel, simulate
-from repro.core.tpu_model import GemmShape, GridOrder, TileConfig, estimate
-from repro.core.autotune import Manifest, TileDecision, tune
+from repro.core.simulator import (
+    CostBatch,
+    CostBreakdown,
+    best_microkernel,
+    best_microkernel_batch,
+    search_batch,
+    simulate,
+    simulate_batch,
+)
+from repro.core.tpu_model import (
+    GemmShape,
+    GridOrder,
+    TileConfig,
+    TpuCostBatch,
+    estimate,
+    estimate_batch,
+)
+from repro.core.autotune import Manifest, TileDecision, tune, tune_batch
 from repro.core.variants import (
     Blocking,
     MicroKernel,
     Problem,
     Variant,
     derive_blocking,
+    derive_blocking_batch,
     feasible_microkernels,
 )
 
 __all__ = [
     "GAP8_FC", "TPU_V5E", "MachineSpec", "get_machine",
-    "CostBreakdown", "best_microkernel", "simulate",
-    "GemmShape", "GridOrder", "TileConfig", "estimate",
-    "Manifest", "TileDecision", "tune",
+    "CostBatch", "CostBreakdown", "best_microkernel",
+    "best_microkernel_batch", "search_batch", "simulate", "simulate_batch",
+    "GemmShape", "GridOrder", "TileConfig", "TpuCostBatch", "estimate",
+    "estimate_batch",
+    "Manifest", "TileDecision", "tune", "tune_batch",
     "Blocking", "MicroKernel", "Problem", "Variant",
-    "derive_blocking", "feasible_microkernels",
+    "derive_blocking", "derive_blocking_batch", "feasible_microkernels",
 ]

@@ -20,15 +20,21 @@ import math
 import os
 from typing import Iterable, Sequence
 
+import numpy as np
+
 from repro.core.hardware import MachineSpec, TPU_V5E, V5E_VMEM_BYTES
 from repro.core.tpu_model import (
     DTYPE_BYTES,
+    SUBLANE,
     GemmShape,
     GridOrder,
     TileConfig,
     TpuCost,
     estimate,
+    estimate_batch,
+    peak_rate,
     vmem_required,
+    vmem_required_batch,
 )
 
 # Candidate block dims: MXU-aligned multiples of 128 plus small sublane
@@ -89,31 +95,160 @@ class TileDecision:
         }
 
 
-@functools.lru_cache(maxsize=4096)
-def _tune_cached(m: int, n: int, k: int, dtype: str, accumulate: bool,
-                 overlap: bool) -> TileDecision:
-    shape = GemmShape(m=m, n=n, k=k, dtype=dtype, accumulate=accumulate)
-    best: TileDecision | None = None
-    for t in candidate_tiles(shape):
-        c = estimate(shape, t)
-        d = TileDecision(shape=shape, tile=t, cost=c, overlap=overlap)
-        if best is None or d.seconds < best.seconds:
-            best = d
-    if best is None:  # degenerate tiny shape: single-block fallback
-        t = TileConfig(8, 128, 128, GridOrder.K_INNER)
-        best = TileDecision(shape, t, estimate(shape, t), overlap)
-    return best
+# ---------------------------------------------------------------------------
+# Batched engine.  The full candidate lattice (every (bm, bn, bk, order)
+# cross product, feasibility expressed as a mask) is materialized once as
+# flat arrays; scoring many shapes is then a single ``estimate_batch`` call
+# over a (P, C) broadcast plus one argmin per row.  Selections are
+# bit-identical with the scalar loop: the lattice preserves
+# ``candidate_tiles``'s enumeration order and ``np.argmin`` keeps the first
+# minimum, exactly like the loop's strict ``<`` update.
+# ---------------------------------------------------------------------------
+
+_FALLBACK_TILE = TileConfig(8, 128, 128, GridOrder.K_INNER)
+
+
+@functools.lru_cache(maxsize=None)
+def _lattice() -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    """Flat (bm, bn, bk, k_inner) arrays in ``candidate_tiles`` order."""
+    bms, bns, bks, inner = [], [], [], []
+    for bm in _CAND_MN:
+        for bn in _CAND_MN:
+            for bk in _CAND_K:
+                for order in (GridOrder.K_INNER, GridOrder.K_OUTER):
+                    bms.append(bm)
+                    bns.append(bn)
+                    bks.append(bk)
+                    inner.append(order is GridOrder.K_INNER)
+    return (np.array(bms, np.int64), np.array(bns, np.int64),
+            np.array(bks, np.int64), np.array(inner, bool))
+
+
+def _feasible_mask(m, n, k, elem_bytes, vmem_bytes: int) -> np.ndarray:
+    """(P, C) candidate-feasibility mask replaying ``candidate_tiles``'s
+    skip rules: one size past a short dim is allowed for padding, and the
+    double-buffered working set must fit the VMEM budget."""
+    bm, bn, bk, _ = _lattice()
+    budget = int(vmem_bytes * VMEM_BUDGET_FRACTION)
+    skip_m = (bm > m) & (bm > 8) & (bm // 2 >= m)
+    skip_n = (bn > n) & (bn > 128) & (bn // 2 >= n)
+    skip_k = (bk > k) & (bk > 128) & (bk // 2 >= k)
+    fits = vmem_required_batch(bm, bn, bk, elem_bytes) <= budget
+    return ~skip_m & ~skip_n & ~skip_k & fits
+
+
+def _solve_batch(shapes: Sequence[GemmShape], overlap: bool,
+                 machine: MachineSpec) -> list[TileDecision]:
+    """Score the whole lattice for every shape at once; argmin per shape."""
+    m = np.array([s.m for s in shapes], np.int64)[:, None]
+    n = np.array([s.n for s in shapes], np.int64)[:, None]
+    k = np.array([s.k for s in shapes], np.int64)[:, None]
+    s_bytes = np.array([DTYPE_BYTES[s.dtype] for s in shapes],
+                       np.int64)[:, None]
+    sub = np.array([SUBLANE[s.dtype] for s in shapes], np.int64)[:, None]
+    peak = np.array([peak_rate(s.dtype) for s in shapes],
+                    np.float64)[:, None]
+    acc = np.array([s.accumulate for s in shapes], bool)[:, None]
+    bm, bn, bk, inner = _lattice()
+
+    mask = _feasible_mask(m, n, k, s_bytes, machine.capacity("L1"))
+    costs = estimate_batch(m, n, k, s_bytes, sub, peak, bm, bn, bk, inner,
+                           accumulate=acc, machine=machine)
+    totals = np.where(mask, costs.total(overlap), np.inf)
+    idx = np.argmin(totals, axis=1)
+    feasible = mask.any(axis=1)
+
+    out = []
+    for p, shape in enumerate(shapes):
+        if feasible[p]:
+            i = int(idx[p])
+            tile = TileConfig(int(bm[i]), int(bn[i]), int(bk[i]),
+                              GridOrder.K_INNER if inner[i]
+                              else GridOrder.K_OUTER)
+        else:  # degenerate tiny shape: single-block fallback
+            tile = _FALLBACK_TILE
+        # The winner's TpuCost is rebuilt by the scalar model: one call per
+        # shape, and the resulting TileDecision is exactly the scalar one.
+        out.append(TileDecision(shape=shape, tile=tile,
+                                cost=estimate(shape, tile, machine),
+                                overlap=overlap))
+    return out
+
+
+# FIFO-bounded decision memo (same memory bound the old lru_cache enforced).
+_TUNE_CACHE: dict[tuple, TileDecision] = {}
+_TUNE_CACHE_MAX = 4096
+
+
+def _cache_key(shape: GemmShape, overlap: bool,
+               machine: MachineSpec) -> tuple:
+    return (shape.m, shape.n, shape.k, shape.dtype, shape.accumulate,
+            overlap, machine.name)
+
+
+def clear_tune_cache() -> None:
+    _TUNE_CACHE.clear()
+
+
+def tune_batch(shapes: Iterable[GemmShape], overlap: bool = True,
+               machine: MachineSpec = TPU_V5E,
+               cache: bool = True) -> list[TileDecision]:
+    """Batched TileTuner: one vectorized lattice evaluation for all shapes.
+
+    Duplicate shapes are deduped before evaluation and decisions are memoised
+    process-wide, so repeated QKV/logits shapes across arch configs cost one
+    lattice row total.  Returns decisions in input order.
+    """
+    shapes = list(shapes)
+    out: list[TileDecision | None] = [None] * len(shapes)
+    missing: dict[GemmShape, list[int]] = {}
+    for i, s in enumerate(shapes):
+        hit = _TUNE_CACHE.get(_cache_key(s, overlap, machine)) if cache \
+            else None
+        if hit is not None:
+            out[i] = hit
+        else:
+            missing.setdefault(s, []).append(i)
+    if missing:
+        for s, d in zip(missing, _solve_batch(list(missing), overlap,
+                                              machine)):
+            if cache:
+                if len(_TUNE_CACHE) >= _TUNE_CACHE_MAX:
+                    _TUNE_CACHE.pop(next(iter(_TUNE_CACHE)))
+                _TUNE_CACHE[_cache_key(s, overlap, machine)] = d
+            for i in missing[s]:
+                out[i] = d
+    return out  # type: ignore[return-value]
 
 
 def tune(shape: GemmShape, overlap: bool = True) -> TileDecision:
-    """Pick the best (bm, bn, bk, order) for one GEMM shape."""
-    return _tune_cached(shape.m, shape.n, shape.k, shape.dtype,
-                        shape.accumulate, overlap)
+    """Pick the best (bm, bn, bk, order) for one GEMM shape (thin wrapper
+    over the batched engine)."""
+    return tune_batch([shape], overlap)[0]
 
 
 def tune_many(shapes: Iterable[GemmShape], overlap: bool = True
               ) -> list[TileDecision]:
-    return [tune(s, overlap) for s in shapes]
+    """Batch-tune many shapes (deduped before evaluation)."""
+    return tune_batch(shapes, overlap)
+
+
+def tune_scalar(shape: GemmShape, overlap: bool = True,
+                machine: MachineSpec = TPU_V5E) -> TileDecision:
+    """The pre-batching scalar search loop, preserved verbatim as the
+    reference oracle for the equivalence tests and the planner benchmark.
+    Do not optimise or route through the batch engine — its whole value is
+    being an independent implementation ``tune_batch`` must agree with."""
+    best: TileDecision | None = None
+    for t in candidate_tiles(shape, vmem_bytes=machine.capacity("L1")):
+        d = TileDecision(shape=shape, tile=t,
+                         cost=estimate(shape, t, machine), overlap=overlap)
+        if best is None or d.seconds < best.seconds:
+            best = d
+    if best is None:  # degenerate tiny shape: single-block fallback
+        best = TileDecision(shape, _FALLBACK_TILE,
+                            estimate(shape, _FALLBACK_TILE, machine), overlap)
+    return best
 
 
 class Manifest:

@@ -10,7 +10,9 @@ shape (paper §4, a stated simplification of the basic simulator).
 from __future__ import annotations
 
 import dataclasses
-from typing import Mapping
+from typing import Mapping, Sequence
+
+import numpy as np
 
 from repro.core.hardware import MachineSpec
 from repro.core.variants import (
@@ -20,7 +22,10 @@ from repro.core.variants import (
     TrafficTerm,
     Variant,
     derive_blocking,
+    derive_blocking_batch,
+    feasible_microkernels,
     traffic_terms,
+    traffic_terms_batch,
 )
 
 
@@ -116,9 +121,22 @@ def best_microkernel(
     policy: str = "analytic",
 ) -> CostBreakdown:
     """Exhaustive search over the register-feasible micro-kernel set —
-    the paper's Table-2 procedure."""
-    from repro.core.variants import feasible_microkernels
+    the paper's Table-2 procedure (thin wrapper over the batched engine)."""
+    return best_microkernel_batch(machine, variant, [prob],
+                                  candidates=candidates, policy=policy)[0]
 
+
+def best_microkernel_scalar(
+    machine: MachineSpec,
+    variant: Variant,
+    prob: Problem,
+    candidates: list[MicroKernel] | None = None,
+    policy: str = "analytic",
+) -> CostBreakdown:
+    """The pre-batching scalar search loop, preserved verbatim as the
+    reference oracle for the equivalence tests and the planner benchmark.
+    Do not optimise or route through the batch engine — its whole value is
+    being an independent implementation the batch path must agree with."""
     cands = candidates or feasible_microkernels(machine, variant)
     best: CostBreakdown | None = None
     for mk in cands:
@@ -127,3 +145,117 @@ def best_microkernel(
             best = cb
     assert best is not None, "no feasible micro-kernel"
     return best
+
+
+# ---------------------------------------------------------------------------
+# Batched evaluation engine: score every (micro-kernel, problem) pair of a
+# variant in a handful of vectorized operations.  The per-candidate totals
+# replay ``simulate``'s arithmetic elementwise in the same order (see
+# core/variants.py), so they are bit-identical with the scalar simulator and
+# argmin micro-kernel selections agree exactly; winners are rehydrated into
+# full :class:`CostBreakdown` objects by one scalar ``simulate`` call each.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class CostBatch:
+    """Structure-of-arrays cost lattice for one variant: ``total`` has shape
+    (problems, micro-kernels), in the candidate order of ``micro_kernels``."""
+
+    variant: Variant
+    micro_kernels: list[MicroKernel]
+    total: np.ndarray
+    arith: np.ndarray
+    blocking: tuple[np.ndarray, np.ndarray, np.ndarray]
+
+
+def _problem_arrays(probs: Sequence[Problem]):
+    m = np.array([p.m for p in probs], np.int64)[:, None]
+    n = np.array([p.n for p in probs], np.int64)[:, None]
+    k = np.array([p.k for p in probs], np.int64)[:, None]
+    s = np.array([p.elem_bytes for p in probs], np.int64)[:, None]
+    return m, n, k, s
+
+
+def simulate_batch(
+    machine: MachineSpec,
+    probs: Sequence[Problem],
+    variant: Variant,
+    candidates: Sequence[MicroKernel] | None = None,
+    policy: str = "analytic",
+) -> CostBatch:
+    """Vectorized ``simulate`` over problems x micro-kernels (one variant).
+
+    Blockings are derived per lattice point with the closed-form occupancy
+    rules; the traffic terms come from ``traffic_terms_batch`` and are
+    divided by the calibrated rates exactly like the scalar path.
+    """
+    probs = list(probs)
+    cands = list(candidates or feasible_microkernels(machine, variant))
+    rows = np.array([mk.rows for mk in cands], np.int64)
+    cols = np.array([mk.cols for mk in cands], np.int64)
+    m, n, k, s = _problem_arrays(probs)
+    blk = derive_blocking_batch(variant, rows, cols, machine, m, n, k, s)
+    terms = traffic_terms_batch(variant, rows, cols, blk, m, n, k, s,
+                                policy=policy)
+    total = None
+    for t in terms:
+        base = machine.rate(t.origin, t.dest)
+        if t.chunk is None:
+            rate = base
+        else:
+            rate = base * (t.chunk / float(machine.reference_chunk))
+        comp = t.bytes / rate
+        total = comp if total is None else total + comp
+    arith_rate = np.array([machine.arith_rate[p.dtype] for p in probs],
+                          np.float64)[:, None]
+    arith = 2.0 * (m * n * k).astype(np.float64) / arith_rate
+    total = np.broadcast_to(total + arith, (len(probs), len(cands)))
+    return CostBatch(variant=variant, micro_kernels=cands, total=total,
+                     arith=arith, blocking=blk)
+
+
+def best_microkernel_batch(
+    machine: MachineSpec,
+    variant: Variant,
+    probs: Sequence[Problem],
+    candidates: Sequence[MicroKernel] | None = None,
+    policy: str = "analytic",
+) -> list[CostBreakdown]:
+    """Batched Table-2 procedure: one argmin row per problem."""
+    probs = list(probs)
+    if not probs:
+        return []
+    batch = simulate_batch(machine, probs, variant, candidates, policy)
+    assert batch.micro_kernels, "no feasible micro-kernel"
+    idx = np.argmin(batch.total, axis=1)
+    return [simulate(machine, variant, batch.micro_kernels[int(i)], p,
+                     policy=policy)
+            for i, p in zip(idx, probs)]
+
+
+def search_batch(
+    machine: MachineSpec,
+    probs: Sequence[Problem],
+    variants: Sequence[Variant] | None = None,
+    policy: str = "analytic",
+) -> list[CostBreakdown]:
+    """Full design-space argmin over variant x micro-kernel for many
+    problems at once — equivalent to (but much faster than) taking the
+    cheapest ``best_microkernel`` across variants per problem."""
+    probs = list(probs)
+    if not probs:
+        return []
+    variants = list(variants or Variant)
+    batches = [simulate_batch(machine, probs, v, policy=policy)
+               for v in variants]
+    totals = np.concatenate([b.total for b in batches], axis=1)
+    idx = np.argmin(totals, axis=1)
+    offsets = np.cumsum([0] + [len(b.micro_kernels) for b in batches])
+    out = []
+    for p, i in zip(probs, idx):
+        b = int(np.searchsorted(offsets, i, side="right") - 1)
+        mk = batches[b].micro_kernels[int(i - offsets[b])]
+        out.append(simulate(machine, batches[b].variant, mk, p,
+                            policy=policy))
+    return out

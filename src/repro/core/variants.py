@@ -27,6 +27,8 @@ import enum
 import math
 from typing import Iterable
 
+import numpy as np
+
 from repro.core.hardware import MachineSpec
 
 
@@ -277,6 +279,122 @@ def traffic_terms(
         add("stream_B", s * k * n * t(m, m_r), "L1", "R", None, note="B_r->regs")
         return terms
 
+    raise ValueError(variant)
+
+
+# ---------------------------------------------------------------------------
+# Batched closed forms.  The same §3.2 occupancy rules and Fig. 1/Fig. 3
+# traffic terms as above, expressed as NumPy array programs over a
+# (problems x micro-kernels) lattice: problem dims arrive as (P, 1) columns,
+# micro-kernel dims as flat (C,) rows.  Every expression replays the scalar
+# functions' integer/float operations in the same order, so the batched
+# simulator's totals are bit-identical with ``simulate`` and argmin
+# selections agree exactly.
+# ---------------------------------------------------------------------------
+
+
+def derive_blocking_batch(
+    variant: Variant, rows: np.ndarray, cols: np.ndarray,
+    machine: MachineSpec, m: np.ndarray, n: np.ndarray, k: np.ndarray,
+    elem_bytes: np.ndarray,
+) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Vectorized :func:`derive_blocking`: (m_c, n_c, k_c) arrays broadcast
+    to the full (P, C) lattice."""
+    l1 = machine.capacity("L1") // elem_bytes
+    l2 = machine.capacity("L2") // elem_bytes
+    if variant is Variant.B3A2C0:
+        m_r, n_r = rows, cols
+        k_c = np.minimum(np.maximum(1, l1 // n_r), k)
+        grown = np.maximum(m_r, l2 // np.maximum(1, k_c))
+        aligned = np.maximum(m_r, (grown // m_r) * m_r)
+        m_c = np.minimum(aligned, np.maximum(m_r, m))
+        m_c = np.where(m >= m_r, np.minimum(m_c, m), m + 0 * m_r)
+        m_c = np.maximum(1, m_c)
+        n_c = n + 0 * cols
+    elif variant is Variant.C3B2A0:
+        m_r = rows
+        n_c = np.minimum(np.maximum(1, l1 // m_r), n)
+        k_c = np.minimum(np.maximum(1, l2 // np.maximum(1, n_c)), k)
+        m_c = m + 0 * rows
+    elif variant is Variant.B3C2A0:
+        m_r, k_r = rows, cols
+        n_c = np.minimum(np.maximum(1, l1 // k_r), n)
+        grown = np.maximum(m_r, l2 // np.maximum(1, n_c))
+        aligned = np.maximum(m_r, (grown // m_r) * m_r)
+        m_c = np.where(m >= m_r, np.minimum(aligned, m), m + 0 * m_r)
+        m_c = np.maximum(1, m_c)
+        k_c = k + 0 * cols
+    else:
+        raise ValueError(variant)
+    return np.broadcast_arrays(m_c, n_c, k_c)
+
+
+@dataclasses.dataclass(frozen=True)
+class TrafficTermBatch:
+    """One traffic term over the whole lattice: ``bytes`` broadcasts to
+    (P, C); ``chunk`` is the per-candidate packing chunk array or None."""
+    name: str
+    bytes: np.ndarray
+    origin: str
+    dest: str
+    chunk: np.ndarray | None
+
+
+def _trips_batch(x, b, policy: str) -> np.ndarray:
+    if policy == "analytic":
+        return x / b
+    if policy == "padded":
+        return np.ceil(x / b)
+    raise ValueError(policy)
+
+
+def traffic_terms_batch(
+    variant: Variant, rows: np.ndarray, cols: np.ndarray,
+    blocking: tuple[np.ndarray, np.ndarray, np.ndarray],
+    m: np.ndarray, n: np.ndarray, k: np.ndarray, elem_bytes: np.ndarray,
+    policy: str = "analytic",
+) -> list[TrafficTermBatch]:
+    """Vectorized :func:`traffic_terms`, in the scalar term order."""
+    m_c, n_c, k_c = blocking
+    s = elem_bytes
+    smn = (s * m * n).astype(np.float64)
+    smk = (s * m * k).astype(np.float64)
+    skn = (s * k * n).astype(np.float64)
+    t = lambda x, b: _trips_batch(x, b, policy)  # noqa: E731
+    T = TrafficTermBatch
+
+    if variant is Variant.B3A2C0:
+        m_r, n_r = rows, cols
+        return [
+            T("pack_B", skn, "M", "M", n_r),
+            T("pack_A", smk * t(n, n_c), "M", "L2", m_r),
+            T("copy_Br", skn * t(m, m_c), "M", "L1", None),
+            T("stream_C", 2.0 * smn * t(k, k_c), "M", "R", None),
+            T("stream_A", smk * t(n, n_r), "L2", "R", None),
+            T("stream_B", skn * t(m, m_r), "L1", "R", None),
+        ]
+    if variant is Variant.C3B2A0:
+        m_r, k_r = rows, cols
+        return [
+            T("pack_C", smn, "M", "M", m_r),
+            T("unpack_C", smn, "M", "M", m_r),
+            T("pack_B", skn * t(m, m_c), "M", "L2", k_r),
+            T("copy_Cr", 2.0 * smn * t(k, k_c), "M", "L1", None),
+            T("stream_A", smk * t(n, n_c), "M", "R", None),
+            T("stream_B", skn * t(m, m_r), "L2", "R", None),
+            T("stream_C", 2.0 * smn * t(k, k_r), "L1", "R", None),
+        ]
+    if variant is Variant.B3C2A0:
+        m_r, k_r = rows, cols
+        return [
+            T("pack_B", skn, "M", "M", k_r),
+            T("pack_C", smn * t(k, k_c), "M", "L2", m_r),
+            T("unpack_C", smn * t(k, k_c), "L2", "M", m_r),
+            T("copy_Br", skn * t(m, m_c), "M", "L1", None),
+            T("stream_A", smk * t(n, n_c), "M", "R", None),
+            T("stream_C", 2.0 * smn * t(k, k_r), "L2", "R", None),
+            T("stream_B", skn * t(m, m_r), "L1", "R", None),
+        ]
     raise ValueError(variant)
 
 

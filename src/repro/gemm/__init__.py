@@ -9,9 +9,18 @@ The paper's predict→choose→run loop as a first-class API:
     >>> p.estimate().total()        # predicted seconds (TPU cost model)
     >>> c = p.execute(a, b, interpret=True)   # tuned Pallas kernel
 
+Planning is a bulk operation: ``plan_many`` dedupes problems and routes
+misses through the backends' vectorized batch engines, and ``sweep``
+crosses problems x machines x backends x dtypes x policies (x variants x
+micro-kernels) into one table of planned grid points:
+
+    >>> res = gemm.sweep(problems, backends=["analytic-gap8"],
+    ...                  variants=list(Variant))
+    >>> res.best(problems[0]).selection
+
 See ``api.py`` for the plan/problem types, ``registry.py`` for the backend
 protocol, ``backends.py`` for the built-ins, ``cache.py`` for memoisation +
-manifest persistence.
+manifest persistence, ``sweep.py`` for the sweep table.
 """
 from repro.gemm.api import (
     GemmPlan,
@@ -29,16 +38,19 @@ from repro.gemm.planner import (
     matmul,
     plan,
     plan_cache_stats,
+    plan_many,
     plan_model_gemms,
     save_cache,
     warm_cache,
 )
 from repro.gemm.registry import Backend, get_backend, register_backend
+from repro.gemm.sweep import SweepResult, SweepRow, sweep
 
 __all__ = [
     "Backend", "GemmPlan", "GemmProblem", "NotExecutableError",
-    "UnknownBackendError", "VariantChoice",
+    "SweepResult", "SweepRow", "UnknownBackendError", "VariantChoice",
     "backends", "clear_plan_cache", "default_execute_backend", "dtype_tag",
     "get_backend", "grouped_matmul", "matmul", "plan", "plan_cache_stats",
-    "plan_model_gemms", "register_backend", "save_cache", "warm_cache",
+    "plan_many", "plan_model_gemms", "register_backend", "save_cache",
+    "sweep", "warm_cache",
 ]

@@ -15,14 +15,18 @@
 """
 from __future__ import annotations
 
-from typing import Mapping
+from typing import Mapping, Sequence
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.autotune import candidate_tiles, tune
-from repro.core.hardware import TPU_V5E, MachineSpec
-from repro.core.simulator import best_microkernel, simulate
+from repro.core.autotune import tune_batch
+from repro.core.hardware import MachineSpec
+from repro.core.simulator import (
+    best_microkernel_batch,
+    search_batch,
+    simulate,
+)
 from repro.core.tpu_model import GridOrder, TileConfig, estimate
 from repro.core.variants import MicroKernel, Variant
 from repro.gemm.api import GemmPlan, GemmProblem, VariantChoice
@@ -58,39 +62,53 @@ def _coerce_mk(mk) -> MicroKernel:
 
 
 class AnalyticGap8Backend(Backend):
-    """The paper's simulator instance: Table-2's exhaustive search."""
+    """The paper's simulator instance: Table-2's exhaustive search.
+
+    Planning is a bulk operation: ``make_plans`` scores the whole
+    (problem x variant x micro-kernel) lattice through the batched simulator
+    and argmin-selects per problem; ``make_plan`` is the one-problem case.
+    """
 
     name = "analytic-gap8"
     executable = False
     default_machine = "gap8-fc"
     default_dtype = "int8"
+    sweep_axes = frozenset({"variant", "micro_kernel"})
 
     def make_plan(self, problem: GemmProblem, machine: MachineSpec,
                   policy: str, options: Mapping) -> GemmPlan:
-        prob = problem.as_problem()
+        return self.make_plans([problem], machine, policy, options)[0]
+
+    def make_plans(self, problems: Sequence[GemmProblem],
+                   machine: MachineSpec, policy: str,
+                   options: Mapping) -> list[GemmPlan]:
         variant = options.get("variant")
         mk = options.get("micro_kernel")
         variants = ([_coerce_variant(variant)] if variant is not None
                     else list(Variant))
+        probs = [p.as_problem() for p in problems]
         if mk is not None:
             if variant is None:
                 raise ValueError(
                     "micro_kernel override requires an explicit variant")
-            cb = simulate(machine, variants[0], _coerce_mk(mk), prob,
-                          policy=policy)
+            cbs = [simulate(machine, variants[0], _coerce_mk(mk), pr,
+                            policy=policy) for pr in probs]
             source = "explicit"
-        else:
-            cb = min((best_microkernel(machine, v, prob, policy=policy)
-                      for v in variants), key=lambda c: c.total)
+        elif variant is not None:
+            cbs = best_microkernel_batch(machine, variants[0], probs,
+                                         policy=policy)
             source = "search"
-        return GemmPlan(
-            problem=problem, backend=self.name, machine=machine.name,
+        else:
+            cbs = search_batch(machine, probs, variants, policy=policy)
+            source = "search"
+        return [GemmPlan(
+            problem=p, backend=self.name, machine=machine.name,
             selection=VariantChoice(cb.variant, cb.micro_kernel, cb.blocking),
             cost=cb,
             provenance={"source": source, "method": "best_microkernel",
                         "policy": policy,
                         "variants": [v.value for v in variants]},
-        )
+        ) for p, cb in zip(problems, cbs)]
 
 
 class AnalyticTpuBackend(Backend):
@@ -103,28 +121,26 @@ class AnalyticTpuBackend(Backend):
 
     def make_plan(self, problem: GemmProblem, machine: MachineSpec,
                   policy: str, options: Mapping) -> GemmPlan:
+        return self.make_plans([problem], machine, policy, options)[0]
+
+    def make_plans(self, problems: Sequence[GemmProblem],
+                   machine: MachineSpec, policy: str,
+                   options: Mapping) -> list[GemmPlan]:
         overlap = bool(options.get("overlap", True))
         tile = options.get("tile")
         if tile is not None:
-            return self.plan_from_tile(problem, machine, policy, tile,
-                                       source="explicit", overlap=overlap)
-        shape = problem.as_shape()
-        if machine.name == TPU_V5E.name:
-            d = tune(shape, overlap=overlap)  # TileTuner (lru-cached search)
-            tile, cost = d.tile, d.cost
-        else:
-            cands = candidate_tiles(shape,
-                                    vmem_bytes=machine.capacity("L1"))
-            if not cands:  # degenerate tiny shape: single-block fallback
-                cands = [TileConfig(8, 128, 128)]
-            scored = [(estimate(shape, t, machine), t) for t in cands]
-            cost, tile = min(scored, key=lambda ct: ct[0].total(overlap))
-        return GemmPlan(
-            problem=problem, backend=self.name, machine=machine.name,
-            selection=tile, cost=cost,
+            return [self.plan_from_tile(p, machine, policy, tile,
+                                        source="explicit", overlap=overlap)
+                    for p in problems]
+        # TileTuner's batched lattice search (deduped + memoised per machine).
+        decisions = tune_batch([p.as_shape() for p in problems],
+                               overlap=overlap, machine=machine)
+        return [GemmPlan(
+            problem=p, backend=self.name, machine=machine.name,
+            selection=d.tile, cost=d.cost,
             provenance={"source": "search", "method": "tile_tuner",
                         "overlap": overlap, "policy": policy},
-        )
+        ) for p, d in zip(problems, decisions)]
 
     def plan_from_tile(self, problem: GemmProblem, machine: MachineSpec,
                        policy: str, tile: TileConfig, *,

@@ -31,10 +31,14 @@ class CacheStats:
     hits: int = 0
     misses: int = 0
     manifest_hits: int = 0
+    # problems dropped by bulk-planning dedupe before any evaluation
+    # (repeated QKV/logits shapes across arch configs, sweep grid points).
+    deduped: int = 0
 
     def as_dict(self) -> dict:
         return {"hits": self.hits, "misses": self.misses,
-                "manifest_hits": self.manifest_hits}
+                "manifest_hits": self.manifest_hits,
+                "deduped": self.deduped}
 
 
 class PlanCache:

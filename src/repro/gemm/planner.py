@@ -31,29 +31,65 @@ def plan(problem, *, backend: str = "analytic-tpu", machine=None,
 
     Decisions are memoised process-wide (``cache=False`` forces a fresh
     search); a manifest warmed via :func:`warm_cache` satisfies tile-backend
-    plans without searching.
+    plans without searching.  ``plan`` is the one-problem case of
+    :func:`plan_many`.
+    """
+    return plan_many([problem], backend=backend, machine=machine,
+                     dtype=dtype, policy=policy, cache=cache, **options)[0]
+
+
+def plan_many(problems, *, backend: str = "analytic-tpu", machine=None,
+              dtype: str | None = None, policy: str = "analytic",
+              cache: bool = True, **options) -> list[GemmPlan]:
+    """Plan many GEMMs in one bulk operation.
+
+    Problems are deduped before any evaluation (the dropped count is
+    reported as ``deduped`` in :func:`plan_cache_stats`), cache and manifest
+    tiers are consulted per unique problem, and the remaining misses go to
+    the backend's batched ``make_plans`` engine as a single vectorized
+    lattice evaluation.  Returns one plan per input problem, in order;
+    duplicate problems share the same plan object.
     """
     b = get_backend(backend)
-    prob = b.coerce_problem(problem, dtype)
     mspec = resolve_machine(machine, b.default_machine)
+    probs = [b.coerce_problem(p, dtype) for p in problems]
+    unique: dict[GemmProblem, None] = {}
+    for p in probs:
+        unique.setdefault(p)
+    _CACHE.stats.deduped += len(probs) - len(unique)
     if not cache:
-        return b.make_plan(prob, mspec, policy, options)
-    key = _CACHE.key(prob, b.name, mspec.name, policy, options)
-    hit = _CACHE.get(key)
-    if hit is not None:
-        return hit
-    built = None
-    # The manifest persists only the default search (tile selected under
-    # overlap=True, no pinned options); requests with explicit options must
-    # re-search rather than inherit a tile chosen under different rules.
-    if not options:
-        tile = _CACHE.manifest_tile(prob)
-        if tile is not None:
-            built = b.plan_from_tile(prob, mspec, policy, tile)
-    if built is None:
-        built = b.make_plan(prob, mspec, policy, options)
-    _CACHE.put(key, built)
-    return built
+        built = dict(zip(unique, b.make_plans(list(unique), mspec, policy,
+                                              options)))
+        return [built[p] for p in probs]
+    resolved: dict[GemmProblem, GemmPlan] = {}
+    missing: list[GemmProblem] = []
+    for p in unique:
+        key = _CACHE.key(p, b.name, mspec.name, policy, options)
+        hit = _CACHE.get(key)
+        if hit is not None:
+            resolved[p] = hit
+            continue
+        # The manifest persists only the default search (tile selected under
+        # overlap=True, no pinned options); requests with explicit options
+        # must re-search rather than inherit a tile chosen under different
+        # rules.
+        built = None
+        if not options:
+            tile = _CACHE.manifest_tile(p)
+            if tile is not None:
+                built = b.plan_from_tile(p, mspec, policy, tile)
+        if built is not None:
+            _CACHE.put(key, built)
+            resolved[p] = built
+        else:
+            missing.append(p)
+    if missing:
+        for p, made in zip(missing, b.make_plans(missing, mspec, policy,
+                                                 options)):
+            _CACHE.put(_CACHE.key(p, b.name, mspec.name, policy, options),
+                       made)
+            resolved[p] = made
+    return [resolved[p] for p in probs]
 
 
 def backends() -> list[str]:
@@ -130,7 +166,9 @@ def plan_model_gemms(cfg, *, tokens: int = 4096,
                      **plan_kwargs) -> list[GemmPlan]:
     """Plans for every GEMM shape of one transformer architecture config —
     the per-arch workload view (serving/benchmarks consume this instead of
-    calling TileTuner directly)."""
+    calling TileTuner directly).  Routed through :func:`plan_many`: repeated
+    shapes are deduped and the misses are planned in one batched lattice
+    evaluation."""
     from repro.core.autotune import model_gemm_shapes
     shapes = model_gemm_shapes(cfg, tokens=tokens)
-    return [plan(s, backend=backend, **plan_kwargs) for s in shapes]
+    return plan_many(shapes, backend=backend, **plan_kwargs)

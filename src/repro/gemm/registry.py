@@ -9,7 +9,7 @@ by name — consumers never hard-wire a simulator/kernel pair again.
 from __future__ import annotations
 
 import abc
-from typing import Mapping
+from typing import Mapping, Sequence
 
 from repro.gemm.api import (
     GemmPlan,
@@ -30,11 +30,23 @@ class Backend(abc.ABC):
     default_machine: str = "tpu-v5e"
     #: dtype assumed when the problem is given as a bare (m, n, k) tuple.
     default_dtype: str = "bf16"
+    #: per-grid-point sweep axes this backend's search consumes
+    #: (``repro.gemm.sweep`` collapses inapplicable axes to one point per
+    #: backend instead of stamping meaningless labels on duplicate rows).
+    sweep_axes: frozenset = frozenset()
 
     @abc.abstractmethod
     def make_plan(self, problem: GemmProblem, machine, policy: str,
                   options: Mapping) -> GemmPlan:
         """Run the backend's analytic model / search and freeze the result."""
+
+    def make_plans(self, problems: Sequence[GemmProblem], machine,
+                   policy: str, options: Mapping) -> list[GemmPlan]:
+        """Plan many problems in one call.  Backends with a vectorized
+        engine override this with a bulk array evaluation; the default just
+        loops ``make_plan``.  Must return one plan per problem, in order."""
+        return [self.make_plan(p, machine, policy, options)
+                for p in problems]
 
     def plan_from_tile(self, problem: GemmProblem, machine, policy: str,
                        tile) -> GemmPlan | None:

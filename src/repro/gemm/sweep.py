@@ -1,0 +1,222 @@
+"""Design-space sweeps: the paper's §4 exploration as one bulk operation.
+
+The paper's whole point is to *search* the algorithmic design space —
+variants x micro-kernels x blockings on the GAP8, tile configurations on the
+TPU — with a cheap analytic model before implementing anything.  ``sweep``
+makes that a table-producing primitive: it crosses a problem list with
+machine / backend / dtype / policy (and, for the GAP8 simulator, variant /
+micro-kernel) axes, routes every grid point through the batched planning
+engine via :func:`repro.gemm.planner.plan_many` (deduped, cached,
+vectorized), and returns a :class:`SweepResult` whose rows carry the frozen
+plan and its cost breakdown.
+
+    >>> from repro import gemm
+    >>> from repro.core.variants import Variant
+    >>> res = gemm.sweep([(256, 784, 2304), (64, 3136, 576)],
+    ...                  backends=["analytic-gap8"], variants=list(Variant))
+    >>> res.best((256, 784, 2304)).selection
+    VariantChoice(variant=<Variant.B3A2C0: 'B3A2C0'>, ...)
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Any, Iterable, Sequence
+
+from repro.core.simulator import CostBreakdown
+from repro.core.tpu_model import TpuCost
+from repro.gemm.api import GemmPlan, GemmProblem
+from repro.gemm.planner import plan_cache_stats, plan_many
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepRow:
+    """One grid point: a problem planned under one axis combination."""
+
+    problem: GemmProblem
+    backend: str
+    machine: str
+    policy: str
+    variant: str | None
+    micro_kernel: str | None
+    plan: GemmPlan
+
+    @property
+    def selection(self) -> Any:
+        return self.plan.selection
+
+    @property
+    def seconds(self) -> float:
+        return self.plan.predicted_seconds
+
+    def breakdown(self) -> dict[str, float]:
+        """Per-component predicted seconds (grouped like the paper's
+        figures for the GAP8 simulator; compute/HBM/VMEM for the TPU)."""
+        c = self.plan.cost
+        if isinstance(c, CostBreakdown):
+            return c.grouped()
+        if isinstance(c, TpuCost):
+            return {"compute": c.t_compute, "hbm": c.t_hbm, "vmem": c.t_vmem}
+        return {}
+
+    def as_dict(self) -> dict:
+        p = self.problem
+        return {
+            "m": p.m, "n": p.n, "k": p.k, "dtype": p.dtype,
+            "backend": self.backend, "machine": self.machine,
+            "policy": self.policy, "variant": self.variant,
+            "micro_kernel": self.micro_kernel,
+            "selection": str(self.selection), "seconds": self.seconds,
+            "breakdown": self.breakdown(),
+        }
+
+
+def _problem_matches(row_problem: GemmProblem, query) -> bool:
+    if isinstance(query, GemmProblem):
+        return row_problem == query
+    if isinstance(query, (tuple, list)) and len(query) == 3:
+        # bare (m, n, k): dtype-agnostic by design
+        return (row_problem.m, row_problem.n, row_problem.k) == tuple(query)
+    if (row_problem.m, row_problem.n, row_problem.k) != (
+            getattr(query, "m", None), getattr(query, "n", None),
+            getattr(query, "k", None)):
+        return False
+    dtype = getattr(query, "dtype", None)
+    return dtype is None or row_problem.dtype == dtype
+
+
+@dataclasses.dataclass
+class SweepResult:
+    """The full grid of planned points plus sweep-level bookkeeping."""
+
+    rows: list[SweepRow]
+    grid: dict[str, list]
+    stats: dict = dataclasses.field(default_factory=dict)
+
+    def __len__(self) -> int:
+        return len(self.rows)
+
+    def __iter__(self):
+        return iter(self.rows)
+
+    def filter(self, **axes) -> list[SweepRow]:
+        """Rows matching every given axis value, e.g.
+        ``filter(variant="B3A2C0", policy="analytic")``."""
+        out = self.rows
+        for name, want in axes.items():
+            out = [r for r in out if getattr(r, name) == want]
+        return out
+
+    def best(self, problem=None) -> SweepRow:
+        """The cheapest row overall, or for one problem (a
+        :class:`GemmProblem`, ``(m, n, k)`` tuple, or core problem/shape)."""
+        rows = self.rows if problem is None else \
+            [r for r in self.rows if _problem_matches(r.problem, problem)]
+        if not rows:
+            raise ValueError(f"no sweep rows match problem {problem!r}")
+        return min(rows, key=lambda r: r.seconds)
+
+    def best_per_problem(self) -> dict[GemmProblem, SweepRow]:
+        out: dict[GemmProblem, SweepRow] = {}
+        for r in self.rows:
+            cur = out.get(r.problem)
+            if cur is None or r.seconds < cur.seconds:
+                out[r.problem] = r
+        return out
+
+    def to_json(self) -> dict:
+        return {
+            "grid": {k: [str(v) for v in vs] for k, vs in self.grid.items()},
+            "stats": self.stats,
+            "rows": [r.as_dict() for r in self.rows],
+        }
+
+    def table(self, limit: int | None = None) -> str:
+        """Human-readable grid table (rows sorted as produced)."""
+        lines = ["problem                  backend@machine       "
+                 "variant/mk     policy    selection                 "
+                 "seconds"]
+        for r in self.rows[:limit]:
+            p = r.problem
+            vm = "/".join(x for x in (r.variant, r.micro_kernel) if x) or "-"
+            lines.append(
+                f"{p.m}x{p.n}x{p.k}:{p.dtype}".ljust(25)
+                + f"{r.backend}@{r.machine}".ljust(22)
+                + vm.ljust(15) + r.policy.ljust(10)
+                + f"{r.selection}".ljust(26) + f"{r.seconds:.6g}")
+        if limit is not None and len(self.rows) > limit:
+            lines.append(f"... ({len(self.rows) - limit} more rows)")
+        return "\n".join(lines)
+
+
+def _axis(values, default=(None,)) -> list:
+    if values is None:
+        return list(default)
+    if isinstance(values, (str, bytes)):
+        return [values]
+    return list(values)
+
+
+def sweep(problems: Iterable, *,
+          machines: Sequence | None = None,
+          backends: Sequence[str] = ("analytic-tpu",),
+          dtypes: Sequence[str] | None = None,
+          policies: Sequence[str] = ("analytic",),
+          variants: Sequence | None = None,
+          micro_kernels: Sequence | None = None,
+          cache: bool = True,
+          **options) -> SweepResult:
+    """Plan every point of the problems x machines x backends x dtypes x
+    policies (x variants x micro-kernels) grid as a bulk operation.
+
+    ``machines`` / ``dtypes`` entries of None mean "the backend's native
+    default".  ``variants`` / ``micro_kernels`` are GAP8-simulator axes and
+    are forwarded as the corresponding plan options (a micro-kernel axis
+    requires a variant axis, as with :func:`repro.gemm.plan`); backends
+    whose search does not consume an axis (``Backend.sweep_axes``) get one
+    grid point with that axis collapsed to None, rather than duplicate rows
+    stamped with labels that had no effect.  Each grid point is planned
+    through :func:`plan_many`, so repeated problems are deduped before
+    evaluation and every point lands in the plan cache.
+    """
+    from repro.gemm.registry import get_backend
+
+    problems = list(problems)
+    grid = {
+        "backends": _axis(backends), "machines": _axis(machines),
+        "dtypes": _axis(dtypes), "policies": _axis(policies),
+        "variants": _axis(variants), "micro_kernels": _axis(micro_kernels),
+    }
+    before = plan_cache_stats()
+    rows: list[SweepRow] = []
+    for be in grid["backends"]:
+        axes = get_backend(be).sweep_axes
+        vas = grid["variants"] if "variant" in axes else [None]
+        mks = grid["micro_kernels"] if "micro_kernel" in axes else [None]
+        for ma, dt, po, va, mk in itertools.product(
+                grid["machines"], grid["dtypes"], grid["policies"],
+                vas, mks):
+            opts = dict(options)
+            if va is not None:
+                opts["variant"] = va
+            if mk is not None:
+                opts["micro_kernel"] = mk
+            plans = plan_many(problems, backend=be, machine=ma, dtype=dt,
+                              policy=po, cache=cache, **opts)
+            va_tag = None if va is None else str(getattr(va, "value", va))
+            mk_tag = None if mk is None else \
+                (str(mk) if not isinstance(mk, (tuple, list))
+                 else f"{mk[0]}x{mk[1]}")
+            rows.extend(SweepRow(
+                problem=p.problem, backend=be, machine=p.machine, policy=po,
+                variant=va_tag, micro_kernel=mk_tag, plan=p,
+            ) for p in plans)
+    after = plan_cache_stats()
+    stats = {
+        "problems": len(problems),
+        "grid_points": len(rows),
+        "deduped": after["deduped"] - before["deduped"],
+        "cache_hits": after["hits"] - before["hits"],
+        "cache_misses": after["misses"] - before["misses"],
+    }
+    return SweepResult(rows=rows, grid=grid, stats=stats)

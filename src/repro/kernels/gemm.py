@@ -85,11 +85,14 @@ def _k_step_kernel(a_ref, b_ref, c_ref, o_ref):
     o_ref[...] = (c_ref[...].astype(acc) + part).astype(o_ref.dtype)
 
 
-def _k_step(a_k, b_k, c, bm, bn, interpret):
-    """One C += A_k @ B_k pass over the full C (grid (M/bm, N/bn))."""
-    m, bk = a_k.shape
-    n = b_k.shape[1]
-    return pl.pallas_call(
+@functools.lru_cache(maxsize=512)
+def _k_step_call(m: int, n: int, bk: int, bm: int, bn: int,
+                 out_dtype: str, interpret: bool, donate: bool = False):
+    """One ``C += A_k @ B_k`` pass over the full C (grid (M/bm, N/bn)),
+    built once per (shape, tile, dtype) configuration and jitted so the
+    tracing/lowering cost is paid once, then reused across every k step of
+    every call with that configuration."""
+    call = pl.pallas_call(
         _k_step_kernel,
         grid=(m // bm, n // bn),
         in_specs=[
@@ -98,12 +101,13 @@ def _k_step(a_k, b_k, c, bm, bn, interpret):
             pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((m, n), c.dtype),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.dtype(out_dtype)),
         input_output_aliases={2: 0},
         compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel")),
         interpret=interpret,
-    )(a_k, b_k, c)
+    )
+    return jax.jit(call, donate_argnums=(2,) if donate else ())
 
 
 def gemm_k_outer(a, b, c, *, tile: TileConfig, interpret: bool = False):
@@ -113,10 +117,18 @@ def gemm_k_outer(a, b, c, *, tile: TileConfig, interpret: bool = False):
     assert k == k2 and c.shape == (m, n)
     bm, bn, bk = min(tile.bm, m), min(tile.bn, n), min(tile.bk, k)
     _check_divisible(m, n, k, bm, bn, bk)
+    dt = jnp.dtype(c.dtype).name
+    # Step 0 must not donate: c is the caller's array there.  Later steps
+    # rebind c to the previous step's output, which is dead after the call —
+    # donating it lets XLA honour the in-place input_output_aliases update
+    # instead of copying C per step (donation is a no-op under interpret).
+    first = _k_step_call(m, n, bk, bm, bn, dt, interpret)
+    rest = first if interpret else \
+        _k_step_call(m, n, bk, bm, bn, dt, interpret, donate=True)
     for kk in range(k // bk):
         a_k = jax.lax.slice_in_dim(a, kk * bk, (kk + 1) * bk, axis=1)
         b_k = jax.lax.slice_in_dim(b, kk * bk, (kk + 1) * bk, axis=0)
-        c = _k_step(a_k, b_k, c, bm, bn, interpret)
+        c = (first if kk == 0 else rest)(a_k, b_k, c)
     return c
 
 

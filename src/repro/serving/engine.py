@@ -12,6 +12,7 @@ Python and runs on CPU in the tests/examples with a smoke model.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import functools
 from typing import Any, Callable
@@ -59,7 +60,9 @@ class ServingEngine:
         self.caches = caches
         self.slot_pos = [0] * max_batch          # next write position
         self.slot_req: list[Request | None] = [None] * max_batch
-        self.queue: list[Request] = []
+        # deque: admission pops from the front per free slot, so the queue
+        # must not pay O(n) per admission like list.pop(0) did.
+        self.queue: collections.deque[Request] = collections.deque()
         self.finished: list[Request] = []
         self._decode = jax.jit(self._decode_impl)
         self._prefill = {}
@@ -67,8 +70,10 @@ class ServingEngine:
                                donate_argnums=(0,))
         # Frozen GEMM plans for this engine's decode workload (M = the slot
         # pool size): the paper's predict-before-run loop applied to serving,
-        # surfaced through perf_report().  On TPU the decode step's pallas
-        # plans reach the same tiles through TileTuner's shared search cache.
+        # surfaced through perf_report().  plan_model_gemms is a bulk
+        # operation (one batched lattice evaluation over the deduped decode
+        # shapes).  On TPU the decode step's pallas plans reach the same
+        # tiles through TileTuner's shared search cache.
         self.gemm_plans = gemm_api.plan_model_gemms(
             lm.cfg, tokens=max_batch, backend="analytic-tpu")
 
@@ -133,7 +138,7 @@ class ServingEngine:
         for slot in self._free_slots():
             if not self.queue:
                 break
-            req = self.queue.pop(0)
+            req = self.queue.popleft()
             ptoks = req.prompt[-self.max_len + req.max_new_tokens:]
             # prefill all but the last prompt token; the first decode step
             # feeds prompt[-1] at position len-1 (cache then logits in one).

@@ -1,0 +1,305 @@
+"""Batched-vs-scalar equivalence for the design-space sweep engine.
+
+The batch engine (core.tpu_model.estimate_batch / core.simulator
+.simulate_batch and the bulk planning built on them) claims *bit-identical*
+totals and *exactly equal* argmin selections vs the scalar simulators.
+These tests pin that claim: property tests on randomized problems, the
+full all-arch + Table-2 acceptance grids, and the bulk façade
+(plan_many / sweep / plan_model_gemms).
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro import gemm
+from repro.configs import ARCH_IDS, get_config
+from repro.core.autotune import (
+    candidate_tiles,
+    model_gemm_shapes,
+    tune_batch,
+    tune_scalar,
+)
+from repro.core.hardware import GAP8_FC, TPU_V5E
+from repro.core.mobilenet import TABLE2
+from repro.core.simulator import (
+    best_microkernel_batch,
+    best_microkernel_scalar,
+    search_batch,
+    simulate,
+    simulate_batch,
+)
+from repro.core.tpu_model import (
+    GemmShape,
+    GridOrder,
+    TileConfig,
+    estimate,
+    estimate_batch,
+    peak_rate,
+)
+from repro.core.tpu_model import DTYPE_BYTES, SUBLANE
+from repro.core.variants import Problem, Variant
+
+
+@pytest.fixture(autouse=True)
+def _fresh_cache():
+    gemm.clear_plan_cache()
+    yield
+    gemm.clear_plan_cache()
+
+
+# The scalar reference loops (the pre-PR algorithms) live next to the batch
+# engines as `tune_scalar` / `best_microkernel_scalar` — one shared oracle
+# for these tests and benchmarks/bench_planner.py.
+
+
+def _scalar_tune(shape, overlap=True, machine=TPU_V5E):
+    d = tune_scalar(shape, overlap, machine)
+    return d.seconds, d.tile
+
+
+def _scalar_best_mk(machine, variant, prob, policy="analytic"):
+    return best_microkernel_scalar(machine, variant, prob, policy=policy)
+
+
+# ---------------------------------------------------------------------------
+# TPU engine: estimate_batch / tune_batch == the scalar loop
+# ---------------------------------------------------------------------------
+
+dims = st.integers(min_value=1, max_value=4096)
+dtypes = st.sampled_from(["bf16", "f32", "int8"])
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=dims, n=dims, k=dims, dtype=dtypes,
+       overlap=st.sampled_from([True, False]))
+def test_tune_batch_matches_scalar_loop(m, n, k, dtype, overlap):
+    shape = GemmShape(m, n, k, dtype)
+    sec, tile = _scalar_tune(shape, overlap)
+    d = tune_batch([shape], overlap, cache=False)[0]
+    assert d.tile == tile
+    assert d.seconds == sec          # bit-identical, not just approx
+
+
+def test_estimate_batch_fields_bit_identical():
+    shapes = [GemmShape(100, 60, 250), GemmShape(8, 8, 8),
+              GemmShape(4096, 4096, 4096), GemmShape(333, 4097, 129, "f32"),
+              GemmShape(64, 128, 8192, "int8"),
+              GemmShape(4096, 152064, 8192)]
+    for shape in shapes:
+        tiles = candidate_tiles(shape)[:80]
+        if not tiles:
+            tiles = [TileConfig(8, 128, 128)]
+        bm = np.array([t.bm for t in tiles], np.int64)
+        bn = np.array([t.bn for t in tiles], np.int64)
+        bk = np.array([t.bk for t in tiles], np.int64)
+        inner = np.array([t.order is GridOrder.K_INNER for t in tiles])
+        batch = estimate_batch(
+            np.array([[shape.m]]), np.array([[shape.n]]),
+            np.array([[shape.k]]), np.array([[DTYPE_BYTES[shape.dtype]]]),
+            np.array([[SUBLANE[shape.dtype]]]),
+            np.array([[peak_rate(shape.dtype)]]),
+            bm, bn, bk, inner, accumulate=shape.accumulate)
+        for ci, t in enumerate(tiles):
+            c = estimate(shape, t)
+            assert batch.hbm_bytes[0, ci] == c.hbm_bytes, (shape, t)
+            assert batch.vmem_bytes[0, ci] == c.vmem_bytes
+            assert batch.vmem_peak[0, ci] == c.vmem_peak
+            assert batch.t_compute[0, ci] == c.t_compute
+            assert batch.mxu_efficiency[0, ci] == c.mxu_efficiency
+            assert batch.total(True)[0, ci] == c.total(True)
+            assert batch.total(False)[0, ci] == c.total(False)
+
+
+def test_tune_batch_fallback_tiny_shape():
+    """Shapes with no feasible lattice point get the scalar fallback tile."""
+    shape = GemmShape(1, 1, 1, "bf16")
+    sec, tile = _scalar_tune(shape)
+    d = tune_batch([shape], cache=False)[0]
+    assert d.tile == tile and d.seconds == sec
+
+
+def test_tune_batch_dedupes_and_memoises():
+    s = GemmShape(64, 96, 128, "bf16")
+    a, b = tune_batch([s, s])
+    assert a is b
+    (c,) = tune_batch([s])        # memoised across calls
+    assert c is a
+
+
+def test_all_arch_selections_identical_to_scalar():
+    """Acceptance: batched and scalar paths select identical tiles on every
+    shape in model_gemm_shapes for all arch configs."""
+    shapes = []
+    for arch in ARCH_IDS:
+        shapes += model_gemm_shapes(get_config(arch))
+    unique = list(dict.fromkeys(shapes))
+    decisions = tune_batch(unique, cache=False)
+    for s, d in zip(unique, decisions):
+        sec, tile = _scalar_tune(s)
+        assert d.tile == tile, s
+        assert d.seconds == sec, s
+
+
+# ---------------------------------------------------------------------------
+# GAP8 engine: simulate_batch / best_microkernel_batch == the scalar loop
+# ---------------------------------------------------------------------------
+
+gap_dims = st.integers(min_value=1, max_value=3000)
+policies = st.sampled_from(["analytic", "padded"])
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=gap_dims, n=gap_dims, k=gap_dims, policy=policies)
+def test_gap8_batch_matches_scalar_loop(m, n, k, policy):
+    p = Problem(m, n, k)
+    for v in Variant:
+        s = _scalar_best_mk(GAP8_FC, v, p, policy)
+        b = best_microkernel_batch(GAP8_FC, v, [p], policy=policy)[0]
+        assert b.micro_kernel == s.micro_kernel, (v, p)
+        assert b.total == s.total
+    sb = search_batch(GAP8_FC, [p], policy=policy)[0]
+    ss = min((_scalar_best_mk(GAP8_FC, v, p, policy) for v in Variant),
+             key=lambda c: c.total)
+    assert (sb.variant, sb.micro_kernel) == (ss.variant, ss.micro_kernel)
+
+
+def test_simulate_batch_totals_bit_identical():
+    probs = [TABLE2[0].problem, TABLE2[9].problem, Problem(100, 60, 250),
+             Problem(1, 1, 1), Problem(2048, 2048, 2048)]
+    for policy in ("analytic", "padded"):
+        for v in Variant:
+            batch = simulate_batch(GAP8_FC, probs, v, policy=policy)
+            for pi, p in enumerate(probs):
+                for ci, mk in enumerate(batch.micro_kernels):
+                    want = simulate(GAP8_FC, v, mk, p, policy=policy).total
+                    assert batch.total[pi, ci] == want, (policy, v, p, mk)
+
+
+def test_table2_regression_through_sweep():
+    """Acceptance: the bulk sweep() reproduces the scalar Table-2 winners on
+    every layer and keeps the documented paper-agreement levels."""
+    probs = [row.problem for row in TABLE2]
+    res = gemm.sweep(probs, backends=["analytic-gap8"],
+                     variants=list(Variant), cache=False)
+    assert len(res) == len(TABLE2) * 3
+    agree = {v: 0 for v in Variant}
+    for v in Variant:
+        rows = res.filter(variant=v.value)
+        assert len(rows) == len(TABLE2)
+        for t2row, r in zip(TABLE2, rows):
+            scalar = _scalar_best_mk(GAP8_FC, v, t2row.problem)
+            assert r.plan.selection.micro_kernel == scalar.micro_kernel
+            assert r.seconds == scalar.total
+            paper = t2row.best[v.value]
+            agree[v] += (scalar.micro_kernel.rows, scalar.micro_kernel.cols) \
+                == (paper.rows, paper.cols)
+    assert agree[Variant.B3A2C0] >= 13
+    assert agree[Variant.B3C2A0] >= 16
+    assert agree[Variant.C3B2A0] >= 7
+
+
+# ---------------------------------------------------------------------------
+# Bulk façade: plan_many / sweep / plan_model_gemms
+# ---------------------------------------------------------------------------
+
+
+def test_plan_many_dedupes_and_preserves_order():
+    probs = [(64, 64, 64), (128, 64, 64), (64, 64, 64), (64, 64, 64)]
+    plans = gemm.plan_many(probs, backend="analytic-tpu")
+    assert [(p.problem.m, p.problem.n) for p in plans] == \
+        [(64, 64), (128, 64), (64, 64), (64, 64)]
+    assert plans[0] is plans[2] is plans[3]
+    stats = gemm.plan_cache_stats()
+    assert stats["deduped"] == 2 and stats["size"] == 2
+
+
+def test_plan_many_matches_scalar_plan():
+    probs = [(256, 128, 512), (64, 64, 64), (100, 70, 130)]
+    many = gemm.plan_many(probs, backend="analytic-tpu")
+    gemm.clear_plan_cache()
+    singles = [gemm.plan(p, backend="analytic-tpu") for p in probs]
+    for a, b in zip(many, singles):
+        assert a.selection == b.selection
+        assert a.predicted_seconds == b.predicted_seconds
+        assert a.provenance == b.provenance
+
+
+def test_plan_many_uses_cache_and_manifest(tmp_path):
+    path = str(tmp_path / "tiles.json")
+    first = gemm.plan_many([(512, 512, 512)], backend="analytic-tpu")
+    assert first[0].provenance["source"] == "search"
+    gemm.save_cache(path)
+    gemm.clear_plan_cache()
+    gemm.warm_cache(path)
+    warmed = gemm.plan_many([(512, 512, 512), (512, 512, 512)],
+                            backend="analytic-tpu")
+    assert warmed[0] is warmed[1]
+    assert warmed[0].provenance["source"] == "manifest"
+    assert warmed[0].selection == first[0].selection
+
+
+def test_plan_many_cache_false_still_dedupes_evaluation():
+    probs = [(96, 96, 96)] * 3
+    plans = gemm.plan_many(probs, backend="analytic-gap8", cache=False)
+    assert plans[0] is plans[1] is plans[2]
+    assert gemm.plan_cache_stats()["size"] == 0
+
+
+def test_sweep_grid_and_best():
+    res = gemm.sweep([(64, 64, 64), (256, 256, 256)],
+                     backends=["analytic-tpu"],
+                     policies=["analytic"],
+                     overlap=True)
+    assert len(res) == 2
+    assert res.stats["grid_points"] == 2
+    best = res.best((64, 64, 64))
+    assert (best.problem.m, best.problem.n, best.problem.k) == (64, 64, 64)
+    per = res.best_per_problem()
+    assert len(per) == 2
+    js = res.to_json()
+    assert len(js["rows"]) == 2 and "seconds" in js["rows"][0]
+    assert "backend@machine" in res.table().splitlines()[0] or res.table()
+
+
+def test_sweep_gap8_variant_axis_matches_pinned_plans():
+    prob = TABLE2[9].problem     # layer 10
+    res = gemm.sweep([prob], backends=["analytic-gap8"],
+                     variants=list(Variant))
+    assert len(res) == 3
+    for r in res:
+        pinned = gemm.plan(prob, backend="analytic-gap8",
+                           variant=Variant(r.variant))
+        assert r.plan is pinned  # same cache entry: identical key
+    win = res.best(prob)
+    assert win.seconds == min(r.seconds for r in res)
+
+
+def test_sweep_collapses_inapplicable_axes_per_backend():
+    """Mixed-backend sweeps: GAP8-only axes (variants) must not stamp
+    duplicate, mislabeled rows onto backends whose search ignores them."""
+    res = gemm.sweep([(512, 512, 512)],
+                     backends=["analytic-tpu", "analytic-gap8"],
+                     variants=list(Variant))
+    tpu_rows = res.filter(backend="analytic-tpu")
+    gap_rows = res.filter(backend="analytic-gap8")
+    assert len(tpu_rows) == 1 and tpu_rows[0].variant is None
+    assert len(gap_rows) == 3
+    assert sorted(r.variant for r in gap_rows) == \
+        sorted(v.value for v in Variant)
+
+
+def test_plan_model_gemms_identical_to_scalar_tune():
+    """Acceptance: ServingEngine's frozen decode plans (plan_model_gemms via
+    the bulk path) select the same tiles the scalar search would — so
+    perf_report() output is unchanged for a fixed config."""
+    for arch in ("qwen2-1.5b", "granite-moe-3b-a800m"):
+        cfg = get_config(arch, smoke=True)
+        for tokens in (4, 4096):
+            plans = gemm.plan_model_gemms(cfg, tokens=tokens,
+                                          backend="analytic-tpu")
+            shapes = model_gemm_shapes(cfg, tokens=tokens)
+            assert len(plans) == len(shapes)
+            for p, s in zip(plans, shapes):
+                sec, tile = _scalar_tune(s)
+                assert p.selection == tile
+                assert p.predicted_seconds == sec

@@ -62,6 +62,28 @@ def test_gemm_k_outer_matches_streamed_ref(m, n, k, dt):
                                rtol=1e-5, atol=1e-5)
 
 
+def test_k_outer_step_kernel_constructed_once_and_reused():
+    """The k-outer step kernel is built once per (shape, tile, dtype) config
+    and reused across the k loop and across calls."""
+    from repro.kernels import gemm as gemm_mod
+    gemm_mod._k_step_call.cache_clear()
+    m, n, k = 128, 128, 256
+    a, b = _rand((m, k), "float32"), _rand((k, n), "float32")
+    c0 = _rand((m, n), "float32")
+    tile = TileConfig(64, 64, 64, GridOrder.K_OUTER)
+    got = gemm_k_outer(a, b, c0, tile=tile, interpret=True)
+    info = gemm_mod._k_step_call.cache_info()
+    assert info.misses == 1 and info.hits == 0  # 4 k-steps, one constructor
+    got2 = gemm_k_outer(a, b, c0, tile=tile, interpret=True)
+    info = gemm_mod._k_step_call.cache_info()
+    assert info.misses == 1 and info.hits == 1  # second call reuses it
+    want = ref.gemm_ref_streamed(a, b, c0, bk=64)
+    for out in (got, got2):
+        np.testing.assert_allclose(np.asarray(out, np.float32),
+                                   np.asarray(want, np.float32),
+                                   rtol=1e-5, atol=1e-5)
+
+
 def test_k_outer_streaming_costs_precision_in_bf16():
     """Numerical finding: the C-streamed variant rounds C to bf16 every k
     pass; the output-stationary variant (f32 VMEM accumulator) does not —
