@@ -18,8 +18,11 @@ Workloads:
                one deduped ``tune_batch`` lattice evaluation.
   cold_tune    single-shape planning latency (scalar loop vs 1-shape batch).
 
-Writes ``BENCH_planner.json`` at the repo root and prints it; CI runs this
-script so planner-performance regressions are visible in the log.
+``BENCH_planner.json`` at the repo root is an **append-only perf
+trajectory**: every run appends one record keyed by the current git SHA
+(re-runs at the same SHA replace that SHA's record), so the file accumulates
+one point per PR instead of overwriting history.  CI runs this script and
+separately asserts the file parses.
 
   PYTHONPATH=src python benchmarks/bench_planner.py
 """
@@ -27,6 +30,7 @@ from __future__ import annotations
 
 import json
 import os
+import subprocess
 import sys
 import time
 
@@ -49,6 +53,30 @@ from repro.core.variants import Variant
 
 OUT_PATH = os.path.join(os.path.dirname(__file__), "..",
                         "BENCH_planner.json")
+TRAJECTORY_SCHEMA = "bench_planner/trajectory-v1"
+
+
+def git_sha() -> str:
+    try:
+        return subprocess.check_output(
+            ["git", "rev-parse", "HEAD"],
+            cwd=os.path.dirname(os.path.abspath(__file__)),
+            text=True, stderr=subprocess.DEVNULL).strip()
+    except (OSError, subprocess.CalledProcessError):
+        return "unknown"
+
+
+def load_trajectory(path: str) -> dict:
+    """Read the trajectory; a legacy single-snapshot file (pre-trajectory
+    format: the report dict itself) migrates to the first record."""
+    if not os.path.exists(path):
+        return {"schema": TRAJECTORY_SCHEMA, "records": []}
+    with open(path) as f:
+        data = json.load(f)
+    if "records" not in data:
+        data = {"schema": TRAJECTORY_SCHEMA,
+                "records": [{"sha": "pre-trajectory", **data}]}
+    return data
 
 
 def _best_of(fn, reps=3):
@@ -132,12 +160,21 @@ def main() -> None:
             "speedup": combined_scalar / combined_batched,
         },
     }
-    with open(OUT_PATH, "w") as f:
-        json.dump(report, f, indent=1, sort_keys=True)
+    sha = git_sha()
+    trajectory = load_trajectory(OUT_PATH)
+    trajectory["records"] = (
+        [r for r in trajectory["records"] if r.get("sha") != sha]
+        + [{"sha": sha, **report}])
+    tmp = OUT_PATH + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(trajectory, f, indent=1, sort_keys=True)
+        f.write("\n")
+    os.replace(tmp, OUT_PATH)
     print(json.dumps(report, indent=1, sort_keys=True))
     print(f"\ncombined Table-2 + all-arch speedup: "
           f"{report['combined']['speedup']:.1f}x "
-          f"(written to {os.path.abspath(OUT_PATH)})")
+          f"(record {sha[:12]} appended to {os.path.abspath(OUT_PATH)}; "
+          f"{len(trajectory['records'])} records in trajectory)")
 
 
 if __name__ == "__main__":

@@ -14,7 +14,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import jax.numpy as jnp
 import numpy as np
 
-from repro import gemm
+from repro import gemm, machines
 from repro.core import GemmShape, Variant
 from repro.core.autotune import candidate_tiles
 from repro.core.tpu_model import estimate
@@ -43,6 +43,16 @@ def main() -> None:
     win = res.best((a.m, a.n, a.k))
     print(f"  sweep winner across {len(res)} grid points: {win.variant} "
           f"{win.selection} ({win.policy} policy, {win.seconds:.3f}s)")
+
+    print("\n--- machine zoo: the same sweep across every FC-class "
+          "manifest ---")
+    fc_zoo = [n for n in machines.list_machines("zoo/*")
+              if machines.get(n).register_lanes <= 8]
+    zres = gemm.sweep([(a.m, a.n, a.k)], backends=["analytic-gap8"],
+                      machines=fc_zoo)
+    for r in sorted(zres, key=lambda r: r.seconds):
+        print(f"  {r.machine:>12}: {r.plan.estimate().micro_kernel} "
+              f"{r.seconds:10.3f}s")
 
     print("\n--- TPU v5e: the analytic search over the Pallas design space ---")
     shape = GemmShape(a.m, a.n, a.k, "bf16")

@@ -1,6 +1,8 @@
 """Batched serving demo: continuous batching over mixed-length requests.
 
     PYTHONPATH=src python examples/serve_batch.py --arch zamba2-1.2b
+    PYTHONPATH=src python examples/serve_batch.py --autoconfigure \\
+        --machine 'tpu-v5e*'    # sweep-driven max_batch/plan selection
 """
 import argparse
 import os
@@ -17,9 +19,12 @@ def main() -> None:
     ap.add_argument("--requests", type=int, default=10)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--autoconfigure", action="store_true")
+    ap.add_argument("--machine", default=None)
     a = ap.parse_args()
     serve_demo(a.arch, n_requests=a.requests, max_new=a.max_new,
-               max_batch=a.max_batch)
+               max_batch=a.max_batch, autoconfigure=a.autoconfigure,
+               machine=a.machine)
 
 
 if __name__ == "__main__":

@@ -3,7 +3,7 @@ blocked GEMM (GotoBLAS/BLIS family), plus its TPU adaptation (TileTuner) and
 the roofline machinery built on it.
 
 Public surface:
-  hardware   — machine specs (GAP8_FC calibration Table 1, TPU_V5E roofline)
+  hardware   — legacy shim over repro.machines (the declarative machine zoo)
   variants   — B3A2C0 / C3B2A0 / B3C2A0 loop nests + blocking derivation
   simulator  — the faithful cost model (paper §3) and Table-2 search
   tpu_model  — Pallas-grid cost model (HBM/VMEM/MXU, ±overlap)
@@ -14,9 +14,11 @@ Public surface:
 NOTE: consumers should plan GEMMs through the unified façade
 ``repro.gemm.plan(...)`` rather than calling ``best_microkernel`` / ``tune``
 directly; these remain public as the implementation layer the registered
-backends dispatch to.
+backends dispatch to.  Machine specs live in ``repro.machines`` (the
+declarative zoo); ``GAP8_FC`` / ``TPU_V5E`` / ``get_machine`` are kept as
+legacy re-exports resolved from the registry.
 """
-from repro.core.hardware import GAP8_FC, TPU_V5E, MachineSpec, get_machine
+from repro.core.hardware import MachineSpec, get_machine
 from repro.core.simulator import (
     CostBatch,
     CostBreakdown,
@@ -44,6 +46,20 @@ from repro.core.variants import (
     derive_blocking_batch,
     feasible_microkernels,
 )
+
+# Legacy constant names resolve lazily from the zoo registry on every
+# access (no import-time snapshot to go stale after a re-registration, and
+# no deprecation noise on `import repro.core`; attribute access on
+# repro.core.hardware is the surface that warns).
+_LAZY_MACHINES = {"GAP8_FC": "gap8-fc", "TPU_V5E": "tpu-v5e"}
+
+
+def __getattr__(name):
+    if name in _LAZY_MACHINES:
+        from repro.machines import get as _get_machine
+        return _get_machine(_LAZY_MACHINES[name])
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
 
 __all__ = [
     "GAP8_FC", "TPU_V5E", "MachineSpec", "get_machine",

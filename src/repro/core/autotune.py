@@ -22,7 +22,7 @@ from typing import Iterable, Sequence
 
 import numpy as np
 
-from repro.core.hardware import MachineSpec, TPU_V5E, V5E_VMEM_BYTES
+from repro.core.hardware import MachineSpec, V5E_VMEM_BYTES
 from repro.core.tpu_model import (
     DTYPE_BYTES,
     SUBLANE,
@@ -32,10 +32,11 @@ from repro.core.tpu_model import (
     TpuCost,
     estimate,
     estimate_batch,
-    peak_rate,
+    machine_peak,
     vmem_required,
     vmem_required_batch,
 )
+from repro.machines import registry as _machines
 
 # Candidate block dims: MXU-aligned multiples of 128 plus small sublane
 # multiples for skinny shapes.
@@ -146,7 +147,7 @@ def _solve_batch(shapes: Sequence[GemmShape], overlap: bool,
     s_bytes = np.array([DTYPE_BYTES[s.dtype] for s in shapes],
                        np.int64)[:, None]
     sub = np.array([SUBLANE[s.dtype] for s in shapes], np.int64)[:, None]
-    peak = np.array([peak_rate(s.dtype) for s in shapes],
+    peak = np.array([machine_peak(machine, s.dtype) for s in shapes],
                     np.float64)[:, None]
     acc = np.array([s.accumulate for s in shapes], bool)[:, None]
     bm, bn, bk, inner = _lattice()
@@ -182,8 +183,10 @@ _TUNE_CACHE_MAX = 4096
 
 def _cache_key(shape: GemmShape, overlap: bool,
                machine: MachineSpec) -> tuple:
+    # cache_token (name@content-fingerprint), not the bare name: same-named
+    # machines with different rate tables must not share tile decisions.
     return (shape.m, shape.n, shape.k, shape.dtype, shape.accumulate,
-            overlap, machine.name)
+            overlap, machine.cache_token)
 
 
 def clear_tune_cache() -> None:
@@ -191,14 +194,16 @@ def clear_tune_cache() -> None:
 
 
 def tune_batch(shapes: Iterable[GemmShape], overlap: bool = True,
-               machine: MachineSpec = TPU_V5E,
+               machine: MachineSpec | None = None,
                cache: bool = True) -> list[TileDecision]:
     """Batched TileTuner: one vectorized lattice evaluation for all shapes.
 
     Duplicate shapes are deduped before evaluation and decisions are memoised
     process-wide, so repeated QKV/logits shapes across arch configs cost one
-    lattice row total.  Returns decisions in input order.
+    lattice row total.  Returns decisions in input order.  ``machine`` is
+    any registry spec (default ``tpu-v5e``).
     """
+    machine = machine or _machines.get("tpu-v5e")
     shapes = list(shapes)
     out: list[TileDecision | None] = [None] * len(shapes)
     missing: dict[GemmShape, list[int]] = {}
@@ -234,11 +239,12 @@ def tune_many(shapes: Iterable[GemmShape], overlap: bool = True
 
 
 def tune_scalar(shape: GemmShape, overlap: bool = True,
-                machine: MachineSpec = TPU_V5E) -> TileDecision:
+                machine: MachineSpec | None = None) -> TileDecision:
     """The pre-batching scalar search loop, preserved verbatim as the
     reference oracle for the equivalence tests and the planner benchmark.
     Do not optimise or route through the batch engine — its whole value is
     being an independent implementation ``tune_batch`` must agree with."""
+    machine = machine or _machines.get("tpu-v5e")
     best: TileDecision | None = None
     for t in candidate_tiles(shape, vmem_bytes=machine.capacity("L1")):
         d = TileDecision(shape=shape, tile=t,

@@ -1,16 +1,18 @@
-"""Calibration harness (paper §3.2).
+"""Calibration micro-experiments (paper §3.2).
 
 The paper calibrates its simulator with a handful of micro-experiments:
 packing rates at a reference chunk size (r = 4), straight panel-copy rates,
 micro-kernel streaming rates, and one arithmetic-rate measurement.  The GAP8
-numbers are published (Table 1) and encoded in ``hardware.GAP8_FC``; this
-module re-runs the *methodology* on the host we are on, producing a
-``MachineSpec`` for it — demonstrating the portability claim (§1: "a few
-experimental data ... collected via simple calibration experiments").
+numbers are published (Table 1) and live in the machine-zoo manifest
+``repro/machines/zoo/gap8-fc.json``; this module provides the raw
+*measurements* for re-running the methodology on the host we are on.
 
-On the CPU container this yields a host-CPU spec (useful for the unit tests
-that check chunk-rate linearity); on a real TPU the same harness would time
-HBM<->VMEM DMAs via Pallas kernels.
+The pipeline around them — assembling a :class:`MachineSpec`, least-squares
+rate fitting on the batched simulators, registering the result and
+persisting a manifest — is :class:`repro.machines.Calibrator`;
+:func:`calibrate_host` below is a thin wrapper over
+``Calibrator.measure_host`` kept for compatibility.  On a real TPU the same
+harness would time HBM<->VMEM DMAs via Pallas kernels.
 """
 from __future__ import annotations
 
@@ -18,7 +20,7 @@ import time
 
 import numpy as np
 
-from repro.core.hardware import MachineSpec
+from repro.machines.spec import MachineSpec
 
 
 def _time(fn, *args, reps: int = 5) -> float:
@@ -69,24 +71,15 @@ def measure_arith_rate(n: int = 1024) -> float:
     return 2.0 * n ** 3 / t
 
 
-def calibrate_host(name: str = "host-cpu") -> MachineSpec:
-    """Run the full calibration suite and assemble a MachineSpec."""
-    pack4 = measure_packing_rate(4)
-    copy = measure_copy_rate()
-    arith = measure_arith_rate()
-    return MachineSpec(
-        name=name,
-        capacities={"M": 1 << 34, "L2": 1 << 21, "L1": 1 << 15, "R": 1 << 10},
-        transfer_rates={
-            ("M", "M"): pack4,
-            ("M", "L2"): pack4,
-            ("L2", "M"): pack4,
-            ("M", "L1"): copy,
-            ("M", "R"): copy,
-            ("L1", "R"): copy * 4,
-            ("L2", "R"): copy * 2,
-        },
-        arith_rate={"int8": arith, "f32": arith},
-        reference_chunk=4,
-        elem_bytes=1,
-    )
+def calibrate_host(name: str = "host-cpu", *, date: str | None = None,
+                   register: bool = False) -> MachineSpec:
+    """Run the full calibration suite and assemble a MachineSpec.
+
+    Thin wrapper over :meth:`repro.machines.Calibrator.measure_host`, which
+    owns the measure→register→persist pipeline; with ``register=True`` the
+    spec replaces the zoo's ``host-cpu`` template in the registry so the
+    planner sweeps against measured host rates.
+    """
+    from repro.machines.calibrate import Calibrator
+
+    return Calibrator.measure_host(name, date=date, register=register)

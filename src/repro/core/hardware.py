@@ -1,107 +1,45 @@
-"""Hardware descriptions for the GEMM performance simulator.
+"""Hardware descriptions — now a compatibility shim over ``repro.machines``.
 
-The paper models an IoT processor as a set of software-managed scratchpad
-memory levels (R, L1, L2, M) with measured point-to-point transfer rates
-(Table 1) plus a flat arithmetic rate.  We keep that structure parametric so
-the same simulator drives both the paper's GAP8 fabric-controller instance
-(4 levels, INT8) and the TPU-v5e adaptation (R / VMEM / HBM, bf16+int8).
+Machine specs used to be hard-coded constants here; they are now JSON
+manifests in the declarative machine zoo (``repro/machines/zoo/*.json``)
+loaded through the :mod:`repro.machines` registry.  Adding a processor is
+dropping a manifest file (or calling ``repro.machines.register``), not
+editing code — see the "Machine zoo & calibration" section of the README.
 
-Rates follow the paper's convention: *bytes per second* for transfers and
-*ops per second* for arithmetic.  The packing/unpacking rates were calibrated
-with chunks of ``r = 4`` contiguous elements and scale linearly with the
-chunk size (paper §3.2: ``n_r=4 → 1.62 MB/s``, ``n_r=8 → 3.24 MB/s``); the
-simulator applies that scaling via :meth:`MachineSpec.packing_rate`.
+This module keeps the legacy surface importable:
+
+* ``MachineSpec`` — re-exported from :mod:`repro.machines.spec` (the
+  canonical home; it gained ``to_json``/``from_json``, validation,
+  level-role aliasing and derived-machine transforms).
+* ``GAP8_FC`` / ``TPU_V5E`` / ``MACHINES`` — deprecated module attributes
+  resolved from the registry on first access.
+* ``get_machine`` — deprecated; call ``repro.machines.get`` instead.
+
+The roofline scalars (``V5E_*``) remain plain constants: they parameterize
+the TPU cost model's geometry (MXU dimension, VMEM budget), not a machine's
+calibrated rates.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Mapping
+import warnings
+
+from repro.machines import registry as _machines
+from repro.machines.spec import MachineSpec
+
+__all__ = [
+    "MB", "KiB", "MiB", "GB", "MachineSpec", "get_machine",
+    "V5E_PEAK_BF16", "V5E_PEAK_INT8", "V5E_HBM_BW", "V5E_HBM_BYTES",
+    "V5E_VMEM_BYTES", "V5E_ICI_BW", "V5E_VMEM_BW", "V5E_MXU",
+]
 
 MB = 1.0e6          # the paper reports MBytes/s (decimal)
 KiB = 1024
 MiB = 1024 * 1024
 GB = 1.0e9
 
-
-@dataclasses.dataclass(frozen=True)
-class MachineSpec:
-    """A machine for the blocked-GEMM cost model.
-
-    ``transfer_rates`` maps ``(origin, destination)`` level names to bytes/s.
-    Level names are free-form but the variant cost models use the canonical
-    set ``{"M", "L2", "L1", "R"}`` (TPU: ``{"M", "L1", "R"}`` where ``L1`` is
-    VMEM and ``M`` is HBM; the "L2" role collapses onto VMEM).
-    """
-
-    name: str
-    # capacities in bytes, by level name (registers expressed in bytes too).
-    capacities: Mapping[str, int]
-    # (origin, dest) -> bytes/s, calibrated at the reference chunk size.
-    transfer_rates: Mapping[tuple[str, str], float]
-    # arithmetic throughput, ops/s (1 MAC = 2 ops), by dtype tag.
-    arith_rate: Mapping[str, float]
-    # chunk size (elements) at which packing rates were calibrated.
-    reference_chunk: int = 4
-    # element size in bytes for the default dtype.
-    elem_bytes: int = 1
-    # number of (SIMD) registers and lanes per register, for micro-kernel
-    # feasibility checks.
-    num_vector_registers: int = 32
-    register_lanes: int = 4
-
-    def rate(self, origin: str, dest: str) -> float:
-        try:
-            return self.transfer_rates[(origin, dest)]
-        except KeyError as e:
-            raise KeyError(
-                f"{self.name}: no calibrated transfer rate {origin}->{dest}"
-            ) from e
-
-    def packing_rate(self, origin: str, dest: str, chunk_elems: int) -> float:
-        """Packing rate scaled by the contiguous-chunk size (paper §3.2)."""
-        scale = chunk_elems / float(self.reference_chunk)
-        return self.rate(origin, dest) * scale
-
-    def capacity(self, level: str) -> int:
-        return int(self.capacities[level])
-
-
 # ---------------------------------------------------------------------------
-# GAP8 fabric controller — the paper's calibrated instance (Table 1).
-# ---------------------------------------------------------------------------
-# Levels: M  = the off-FC memory the paper calls "L3"/main,
-#         L2 = 512 KiB shared memory area,
-#         L1 = 16 KiB FC L1 memory area,
-#         R  = 32 SIMD registers of 32 bits (4 INT8 lanes each).
-GAP8_FC = MachineSpec(
-    name="gap8-fc",
-    capacities={
-        "M": 8 * MiB,          # external; effectively unbounded for the model
-        "L2": 512 * KiB,
-        "L1": 16 * KiB,
-        "R": 32 * 4,           # 32 regs x 4 INT8 lanes
-    },
-    transfer_rates={
-        # -- packing / unpacking (measured with r = 4 element chunks) -------
-        ("M", "M"): 1.62e0 * MB,    # e.g. B -> B_c with the buffer in M
-        ("M", "L2"): 5.30e-1 * MB,  # e.g. A -> A_c
-        ("L2", "M"): 6.54e-1 * MB,  # unpack C_c -> C (B3C2A0)
-        # -- L3->L1 panel copy (contiguous; not chunk-scaled) ----------------
-        ("M", "L1"): 8.81e0 * MB,
-        # -- micro-kernel streaming ------------------------------------------
-        ("M", "R"): 4.87e-1 * MB,
-        ("L1", "R"): 1.78e2 * MB,
-        ("L2", "R"): 7.18e0 * MB,
-    },
-    arith_rate={"int8": 5.64e9},    # 5.64 INT8 GOPS (paper §3.2)
-    reference_chunk=4,
-    elem_bytes=1,
-    num_vector_registers=32,
-    register_lanes=4,
-)
-
-# ---------------------------------------------------------------------------
-# TPU v5e — the adaptation target (roofline constants from the assignment).
+# TPU v5e roofline constants (cost-model geometry; the calibrated machine
+# spec itself lives in repro/machines/zoo/tpu-v5e.json).
 # ---------------------------------------------------------------------------
 V5E_PEAK_BF16 = 197e12            # FLOP/s per chip
 V5E_PEAK_INT8 = 394e12            # OP/s per chip
@@ -112,34 +50,33 @@ V5E_ICI_BW = 50e9                 # bytes/s per link
 V5E_VMEM_BW = 22e12               # bytes/s VMEM<->VREG (approximate)
 V5E_MXU = 128                     # systolic array dimension
 
-TPU_V5E = MachineSpec(
-    name="tpu-v5e",
-    capacities={
-        "M": int(V5E_HBM_BYTES),   # HBM
-        "L1": int(V5E_VMEM_BYTES), # VMEM (software-managed scratchpad)
-        "R": 64 * KiB,             # VREG file (nominal)
-    },
-    transfer_rates={
-        ("M", "L1"): V5E_HBM_BW,   # HBM -> VMEM (DMA)
-        ("L1", "M"): V5E_HBM_BW,
-        ("M", "M"): V5E_HBM_BW,    # HBM-resident reshuffle ~ HBM bw bound
-        ("L1", "R"): V5E_VMEM_BW,
-        ("M", "R"): V5E_HBM_BW,    # streaming HBM operand
-    },
-    arith_rate={"bf16": V5E_PEAK_BF16, "int8": V5E_PEAK_INT8,
-                "f32": V5E_PEAK_BF16 / 2},
-    reference_chunk=4,
-    elem_bytes=2,                  # bf16 default
-    num_vector_registers=64,
-    register_lanes=1024,           # 8 sublanes x 128 lanes (f32 lanes)
-)
+_DEPRECATED = {"GAP8_FC": "gap8-fc", "TPU_V5E": "tpu-v5e"}
 
 
-MACHINES = {"gap8-fc": GAP8_FC, "tpu-v5e": TPU_V5E}
+def __getattr__(name: str):
+    if name in _DEPRECATED:
+        warnings.warn(
+            f"repro.core.hardware.{name} is deprecated; use "
+            f"repro.machines.get({_DEPRECATED[name]!r}) — the spec now "
+            f"lives in the machine zoo manifest",
+            DeprecationWarning, stacklevel=2)
+        return _machines.get(_DEPRECATED[name])
+    if name == "MACHINES":
+        warnings.warn(
+            "repro.core.hardware.MACHINES is deprecated; use "
+            "repro.machines.list_machines() / repro.machines.get(name)",
+            DeprecationWarning, stacklevel=2)
+        return {n: _machines.get(n) for n in _machines.list_machines()}
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
 def get_machine(name: str) -> MachineSpec:
+    """Deprecated alias of :func:`repro.machines.get`."""
+    warnings.warn(
+        "repro.core.hardware.get_machine is deprecated; use "
+        "repro.machines.get", DeprecationWarning, stacklevel=2)
     try:
-        return MACHINES[name]
+        return _machines.get(name)
     except KeyError as e:
-        raise KeyError(f"unknown machine {name!r}; have {sorted(MACHINES)}") from e
+        raise KeyError(f"unknown machine {name!r}; have "
+                       f"{_machines.list_machines()}") from e

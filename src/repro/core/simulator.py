@@ -6,6 +6,12 @@ micro-kernel streaming, and arithmetic.  The basic model assumes *no overlap*
 between data transfers and compute (paper §3.1), so the total is the plain
 sum of all components; the arithmetic rate is independent of the micro-kernel
 shape (paper §4, a stated simplification of the basic simulator).
+
+Machines come from the ``repro.machines`` zoo.  The simulator addresses the
+canonical level roles ``{"M", "L2", "L1", "R"}``; a spec whose physical
+hierarchy differs (a two-level Cortex-M-class part, the TPU's HBM/VMEM pair)
+declares ``level_aliases`` and every ``machine.rate`` / ``machine.capacity``
+call here resolves through them — no per-machine special cases.
 """
 from __future__ import annotations
 
@@ -250,6 +256,11 @@ def search_batch(
     batches = [simulate_batch(machine, probs, v, policy=policy)
                for v in variants]
     totals = np.concatenate([b.total for b in batches], axis=1)
+    if totals.shape[1] == 0:
+        raise ValueError(
+            f"{machine.name}: no register-feasible micro-kernel for any of "
+            f"{[v.value for v in variants]} ({machine.num_vector_registers} "
+            f"regs x {machine.register_lanes} lanes)")
     idx = np.argmin(totals, axis=1)
     offsets = np.cumsum([0] + [len(b.micro_kernels) for b in batches])
     out = []

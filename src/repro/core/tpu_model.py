@@ -25,11 +25,8 @@ import math
 
 import numpy as np
 
-from repro.core.hardware import (
-    MachineSpec,
-    TPU_V5E,
-    V5E_MXU,
-)
+from repro.core.hardware import MachineSpec, V5E_MXU  # noqa: F401
+from repro.machines import registry as _machines
 
 DTYPE_BYTES = {"int8": 1, "bf16": 2, "f32": 4}
 # minimal TPU tile (sublane, lane) per dtype — misaligned blocks get padded.
@@ -106,8 +103,25 @@ class TpuCost:
         return ideal / self.total(overlap)
 
 
+def _default_machine() -> MachineSpec:
+    return _machines.get("tpu-v5e")
+
+
+def machine_peak(machine: MachineSpec, dtype: str) -> float:
+    """Per-dtype arithmetic peak of a machine's rate table.
+
+    ``f32`` computes through the bf16 MXU path (same convention the model
+    has always used); machines whose table lacks the requested tag fall
+    back to their fastest declared rate, so analytic what-ifs on foreign
+    machines (e.g. the GAP8 spec through the TPU model) stay well-defined.
+    """
+    tag = "bf16" if dtype == "f32" else dtype
+    rate = machine.arith_rate.get(tag)
+    return rate if rate is not None else max(machine.arith_rate.values())
+
+
 def _peak(dtype: str) -> float:
-    return TPU_V5E.arith_rate["bf16" if dtype == "f32" else dtype]
+    return machine_peak(_default_machine(), dtype)
 
 
 def _pad(x: int, mult: int) -> int:
@@ -147,8 +161,12 @@ def mxu_efficiency(shape: GemmShape, tile: TileConfig) -> float:
 
 
 def estimate(shape: GemmShape, tile: TileConfig,
-             machine: MachineSpec = TPU_V5E) -> TpuCost:
+             machine: MachineSpec | None = None) -> TpuCost:
     """Traffic-based cost estimate of a tiled Pallas GEMM (one chip).
+
+    ``machine`` is any registry spec (default: ``tpu-v5e`` from the zoo);
+    rates resolve through the spec's level aliases, so every transfer/peak
+    term is machine-parametric.
 
     HBM->VMEM traffic follows the paper's revisit accounting:
       A block (bm x bk): fetched once per (i, k) per j-sweep  -> M.K.(N/bn)
@@ -156,6 +174,7 @@ def estimate(shape: GemmShape, tile: TileConfig,
       C block (bm x bn): K_INNER  -> written once (+read if accumulate);
                          K_OUTER  -> read+written every k step (K/bk).
     """
+    machine = machine or _default_machine()
     s = DTYPE_BYTES[shape.dtype]
     m, n, k = shape.m, shape.n, shape.k
     gm, gn, gk = (math.ceil(m / tile.bm), math.ceil(n / tile.bn),
@@ -175,7 +194,7 @@ def estimate(shape: GemmShape, tile: TileConfig,
     vmem_stream = a_bytes + b_bytes + 8.0 * m * n * gk
 
     eff = mxu_efficiency(shape, tile)
-    t_compute = shape.flops / (_peak(shape.dtype) * eff)
+    t_compute = shape.flops / (machine_peak(machine, shape.dtype) * eff)
     t_hbm = hbm / machine.rate("M", "L1")
     t_vmem = vmem_stream / machine.rate("L1", "R")
     return TpuCost(
@@ -250,14 +269,17 @@ def vmem_required_batch(bm, bn, bk, elem_bytes) -> np.ndarray:
 
 def estimate_batch(m, n, k, elem_bytes, sublane, peak, bm, bn, bk, k_inner,
                    accumulate=False,
-                   machine: MachineSpec = TPU_V5E) -> TpuCostBatch:
+                   machine: MachineSpec | None = None) -> TpuCostBatch:
     """Vectorized :func:`estimate` over problem arrays x tile arrays.
 
     Problem-side arrays (``m``, ``n``, ``k``, ``elem_bytes``, ``sublane``,
     ``peak``, ``accumulate``) and tile-side arrays (``bm``, ``bn``, ``bk``,
     ``k_inner``) must broadcast against each other — the canonical layout is
     problems as ``(P, 1)`` columns against flat ``(C,)`` candidate rows.
+    ``peak`` is the per-problem arithmetic rate (use :func:`machine_peak`
+    so non-default machines keep their own dtype tables).
     """
+    machine = machine or _default_machine()
     m, n, k = (np.asarray(x, np.int64) for x in (m, n, k))
     s = np.asarray(elem_bytes, np.int64)
     sub = np.asarray(sublane, np.int64)

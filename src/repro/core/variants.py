@@ -19,6 +19,12 @@ traffic terms, and the scratchpad-occupancy rule used to derive
 ``(m_c, n_c, k_c)`` from the micro-kernel dimensions (paper §3.2: "set the
 configuration parameters so that the buffers maximise the occupancy of the
 L1/L2 memory areas").
+
+Level names here are canonical *roles* (``M``/``L2``/``L1``/``R``), not
+physical levels: ``machine.capacity("L2")`` and the traffic terms' rate
+lookups resolve through the spec's ``level_aliases`` (see
+``repro.machines.spec``), so a machine without a distinct L2 area simply
+aliases the role onto another level and the same occupancy rules apply.
 """
 from __future__ import annotations
 

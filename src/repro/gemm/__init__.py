@@ -18,6 +18,10 @@ micro-kernels) into one table of planned grid points:
     ...                  variants=list(Variant))
     >>> res.best(problems[0]).selection
 
+Machines come from the declarative zoo (``repro.machines``): ``plan`` /
+``sweep`` accept registry names, raw ``MachineSpec`` objects, or glob
+patterns (``machines=["zoo/*"]`` sweeps every manifest-backed machine).
+
 See ``api.py`` for the plan/problem types, ``registry.py`` for the backend
 protocol, ``backends.py`` for the built-ins, ``cache.py`` for memoisation +
 manifest persistence, ``sweep.py`` for the sweep table.

@@ -23,10 +23,11 @@ from __future__ import annotations
 import dataclasses
 from typing import Any, Mapping
 
-from repro.core.hardware import MachineSpec, get_machine
 from repro.core.simulator import CostBreakdown
 from repro.core.tpu_model import DTYPE_BYTES, GemmShape, TpuCost
 from repro.core.variants import Blocking, MicroKernel, Problem, Variant
+from repro.machines import MachineSpec
+from repro.machines import resolve as _resolve_machine
 
 
 class NotExecutableError(RuntimeError):
@@ -172,8 +173,6 @@ def _backend_of(name: str):
 
 def resolve_machine(machine: str | MachineSpec | None,
                     default: str) -> MachineSpec:
-    if machine is None:
-        return get_machine(default)
-    if isinstance(machine, MachineSpec):
-        return machine
-    return get_machine(machine)
+    """Resolve a plan's machine argument through the ``repro.machines``
+    registry (names and aliases; specs pass through unchanged)."""
+    return _resolve_machine(machine, default)

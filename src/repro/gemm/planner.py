@@ -64,7 +64,10 @@ def plan_many(problems, *, backend: str = "analytic-tpu", machine=None,
     resolved: dict[GemmProblem, GemmPlan] = {}
     missing: list[GemmProblem] = []
     for p in unique:
-        key = _CACHE.key(p, b.name, mspec.name, policy, options)
+        # cache_token = name@content-fingerprint: same-named machines with
+        # different rate tables (derived specs, re-registered calibrations)
+        # must not share plans.
+        key = _CACHE.key(p, b.name, mspec.cache_token, policy, options)
         hit = _CACHE.get(key)
         if hit is not None:
             resolved[p] = hit
@@ -86,7 +89,8 @@ def plan_many(problems, *, backend: str = "analytic-tpu", machine=None,
     if missing:
         for p, made in zip(missing, b.make_plans(missing, mspec, policy,
                                                  options)):
-            _CACHE.put(_CACHE.key(p, b.name, mspec.name, policy, options),
+            _CACHE.put(_CACHE.key(p, b.name, mspec.cache_token, policy,
+                                  options),
                        made)
             resolved[p] = made
     return [resolved[p] for p in probs]

@@ -27,6 +27,7 @@ from repro.core.simulator import CostBreakdown
 from repro.core.tpu_model import TpuCost
 from repro.gemm.api import GemmPlan, GemmProblem
 from repro.gemm.planner import plan_cache_stats, plan_many
+from repro.machines import MachineSpec, expand_many
 
 
 @dataclasses.dataclass(frozen=True)
@@ -125,8 +126,10 @@ class SweepResult:
         return out
 
     def to_json(self) -> dict:
+        def tag(v):
+            return v.name if isinstance(v, MachineSpec) else str(v)
         return {
-            "grid": {k: [str(v) for v in vs] for k, vs in self.grid.items()},
+            "grid": {k: [tag(v) for v in vs] for k, vs in self.grid.items()},
             "stats": self.stats,
             "rows": [r.as_dict() for r in self.rows],
         }
@@ -170,7 +173,10 @@ def sweep(problems: Iterable, *,
     policies (x variants x micro-kernels) grid as a bulk operation.
 
     ``machines`` / ``dtypes`` entries of None mean "the backend's native
-    default".  ``variants`` / ``micro_kernels`` are GAP8-simulator axes and
+    default".  ``machines`` entries may be registry names, raw
+    :class:`MachineSpec` objects, or glob patterns (``"zoo/*"`` expands to
+    every manifest-backed machine, ``"gap*"`` fnmatch-globs all registered
+    names).  ``variants`` / ``micro_kernels`` are GAP8-simulator axes and
     are forwarded as the corresponding plan options (a micro-kernel axis
     requires a variant axis, as with :func:`repro.gemm.plan`); backends
     whose search does not consume an axis (``Backend.sweep_axes``) get one
@@ -183,7 +189,7 @@ def sweep(problems: Iterable, *,
 
     problems = list(problems)
     grid = {
-        "backends": _axis(backends), "machines": _axis(machines),
+        "backends": _axis(backends), "machines": expand_many(machines),
         "dtypes": _axis(dtypes), "policies": _axis(policies),
         "variants": _axis(variants), "micro_kernels": _axis(micro_kernels),
     }

@@ -21,7 +21,9 @@ from repro.serving.engine import Request, ServingEngine
 
 def serve_demo(arch: str, *, smoke: bool = True, n_requests: int = 8,
                max_new: int = 12, max_batch: int = 4, max_len: int = 256,
-               ckpt_dir: str | None = None, seed: int = 0) -> dict:
+               ckpt_dir: str | None = None, seed: int = 0,
+               autoconfigure: bool = False, machine: str | None = None
+               ) -> dict:
     cfg = get_config(arch, smoke=smoke)
     lm = LM(cfg, HOST_MESH)
     values, _ = split_params(lm.init(jax.random.key(seed)))
@@ -32,7 +34,19 @@ def serve_demo(arch: str, *, smoke: bool = True, n_requests: int = 8,
             values = state["params"]
             print(f"serving checkpoint step {step}")
 
-    eng = ServingEngine(lm, values, max_batch=max_batch, max_len=max_len)
+    if autoconfigure:
+        # sweep the decode-batch x dtype grid and let the analytic model
+        # pick max_batch / plans (ServingEngine.autoconfigure).
+        eng = ServingEngine.autoconfigure(lm, values, machine=machine,
+                                          dtypes=("bf16", "int8"),
+                                          batches=(1, 2, 4, 8, 16),
+                                          max_len=max_len)
+        ac = eng.autoconfig
+        print(f"autoconfigured: max_batch={ac['max_batch']} "
+              f"dtype={ac['dtype']} machine={ac['machine']} "
+              f"({ac['predicted_tokens_per_second']:.0f} pred tok/s)")
+    else:
+        eng = ServingEngine(lm, values, max_batch=max_batch, max_len=max_len)
     rng = np.random.default_rng(seed)
     t0 = time.perf_counter()
     for i in range(n_requests):
@@ -57,9 +71,16 @@ def main() -> None:
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=256)
     ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--autoconfigure", action="store_true",
+                    help="pick max_batch/plans by sweeping the decode-batch"
+                         " x dtype grid instead of using --max-batch")
+    ap.add_argument("--machine", default=None,
+                    help="machine name/glob for --autoconfigure "
+                         "(e.g. tpu-v5e, 'tpu-v5e*')")
     a = ap.parse_args()
     serve_demo(a.arch, n_requests=a.requests, max_new=a.max_new,
-               max_batch=a.max_batch, max_len=a.max_len, ckpt_dir=a.ckpt_dir)
+               max_batch=a.max_batch, max_len=a.max_len, ckpt_dir=a.ckpt_dir,
+               autoconfigure=a.autoconfigure, machine=a.machine)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,101 @@
+"""Machine-zoo command line.
+
+    python -m repro.machines validate [--dir DIR]   # schema-check manifests
+    python -m repro.machines list [PATTERN]         # registered machines
+    python -m repro.machines show NAME              # one manifest, pretty
+    python -m repro.machines calibrate [--name N --date D --out DIR]
+
+``validate`` is wired into CI before pytest: every ``zoo/*.json`` must parse
+against the ``repro.machines/v1`` schema (level names, rate keys, dtype
+tables) or the build fails.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+
+from repro import machines
+from repro.machines.spec import MachineSpec, SpecValidationError
+
+
+def cmd_validate(args) -> int:
+    directory = args.dir or machines.zoo_dir()
+    paths = sorted(glob.glob(os.path.join(directory, "*.json")))
+    if not paths:
+        print(f"no manifests found under {directory}", file=sys.stderr)
+        return 1
+    failures = 0
+    for path in paths:
+        rel = os.path.relpath(path, directory)
+        try:
+            spec = MachineSpec.from_manifest(path)
+            # the manifest must also round-trip losslessly
+            if MachineSpec.from_json(spec.to_json()) != spec:
+                raise SpecValidationError("to_json/from_json round-trip "
+                                          "drift")
+            print(f"  OK   {rel:<24} {spec.name} "
+                  f"(levels={'/'.join(spec.levels)}, "
+                  f"dtypes={','.join(sorted(spec.arith_rate))})")
+        except (SpecValidationError, json.JSONDecodeError, OSError) as e:
+            failures += 1
+            print(f"  FAIL {rel:<24} {e}", file=sys.stderr)
+    print(f"{len(paths) - failures}/{len(paths)} manifests valid")
+    return 1 if failures else 0
+
+
+def cmd_list(args) -> int:
+    for name in machines.list_machines(args.pattern):
+        spec = machines.get(name)
+        src = machines.source_of(name) or "?"
+        print(f"  {name:<20} [{src}] levels={'/'.join(spec.levels)} "
+              f"dtypes={','.join(sorted(spec.arith_rate))}")
+    return 0
+
+
+def cmd_show(args) -> int:
+    json.dump(machines.get(args.name).to_json(), sys.stdout, indent=1)
+    print()
+    return 0
+
+
+def cmd_calibrate(args) -> int:
+    spec = machines.Calibrator.measure_host(
+        args.name, date=args.date, register=True, manifest_dir=args.out)
+    print(f"calibrated {spec.name}: "
+          f"{json.dumps(spec.provenance['calibration']['measured'])}")
+    if args.out:
+        print(f"manifest written to "
+              f"{os.path.join(args.out, spec.name + '.json')}")
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m repro.machines")
+    sub = ap.add_subparsers(dest="cmd", required=True)
+    v = sub.add_parser("validate", help="schema-check every zoo manifest")
+    v.add_argument("--dir", default=None)
+    v.set_defaults(fn=cmd_validate)
+    ls = sub.add_parser("list", help="registered machines")
+    ls.add_argument("pattern", nargs="?", default=None)
+    ls.set_defaults(fn=cmd_list)
+    sh = sub.add_parser("show", help="print one machine's manifest")
+    sh.add_argument("name")
+    sh.set_defaults(fn=cmd_show)
+    ca = sub.add_parser("calibrate",
+                        help="run the paper's 3.2 micro-experiments on this "
+                             "host and register the spec")
+    ca.add_argument("--name", default="host-cpu")
+    ca.add_argument("--date", default=None,
+                    help="calibration date recorded in provenance")
+    ca.add_argument("--out", default=None,
+                    help="directory to persist the manifest into")
+    ca.set_defaults(fn=cmd_calibrate)
+    args = ap.parse_args(argv)
+    return args.fn(args)
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

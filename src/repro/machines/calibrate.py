@@ -1,0 +1,391 @@
+"""The calibrate→register→plan pipeline (paper §3.2, made first-class).
+
+The paper builds a machine from a handful of micro-experiments; this module
+closes the loop so a calibrated spec feeds the planner instead of vanishing:
+
+1. **measure** — :meth:`Calibrator.measure_host` wraps the
+   ``repro.core.calibrate`` micro-experiments (packing / copy / arithmetic
+   rates) into a seed :class:`MachineSpec`.
+2. **fit** — :meth:`Calibrator.fit` refines a spec against measured GEMM
+   wall times.  The simulators are *linear in the inverse rates*: a GEMM's
+   predicted time is ``sum_r bytes_r / rate_r + flops / arith``, so fitting
+   all rates at once is one least-squares solve ``A x = t`` where ``x`` are
+   inverse rates and the design matrix ``A`` comes from the **batched**
+   engines (``traffic_terms_batch`` for the BLIS-variant model,
+   ``estimate_batch`` for the Pallas/TPU model) — no scalar per-sample
+   loops.  ``design_matrix_scalar`` replays the same accounting through the
+   scalar simulators and is kept as the equivalence oracle for the tests.
+3. **register / persist** — the fitted spec lands in the
+   :mod:`repro.machines` registry and (optionally) a JSON manifest, carrying
+   fit provenance: RMS residual, sample count, and the calibration date
+   passed in by the caller.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Any, Mapping, Sequence
+
+import numpy as np
+
+from repro.machines import registry as _registry
+from repro.machines.spec import MachineSpec
+
+_RATE = "rate:"
+_ARITH = "arith:"
+
+
+@dataclasses.dataclass(frozen=True)
+class FitReport:
+    """Provenance of one vectorized rate fit."""
+
+    columns: list[str]          # "rate:M->L2" / "arith:int8" design columns
+    inverse_rates: np.ndarray   # the lstsq solution x (seconds per byte/op)
+    residual_rms_s: float       # RMS of (A@x - t) over the samples
+    samples: int
+    date: str | None
+
+    def as_provenance(self) -> dict[str, Any]:
+        return {
+            "method": "vectorized-lstsq",
+            "columns": list(self.columns),
+            "residual_rms_s": float(self.residual_rms_s),
+            "samples": int(self.samples),
+            "date": self.date,
+        }
+
+
+class Calibrator:
+    """Fit a machine's rate tables from measured GEMM times.
+
+    ``template`` (name or spec) supplies the geometry — levels, capacities,
+    register file — and any rates the fit does not exercise.  ``model``
+    picks the cost model the design matrix replays: ``"blis"`` (the paper's
+    variant simulator; default for int8-style scratchpad machines) or
+    ``"pallas"`` (the TPU tile model; default when the template declares a
+    ``bf16`` rate).
+    """
+
+    def __init__(self, template, *, model: str | None = None,
+                 variant=None, micro_kernel=None, policy: str = "analytic"):
+        from repro.core.variants import Variant, feasible_microkernels
+
+        self.template = _registry.resolve(template)
+        if model is None:
+            model = "pallas" if "bf16" in self.template.arith_rate else "blis"
+        if model not in ("blis", "pallas"):
+            raise ValueError(f"unknown cost model {model!r}; "
+                             f"use 'blis' or 'pallas'")
+        self.model = model
+        self.policy = policy
+        if model == "blis":
+            self.variant = variant or Variant.B3A2C0
+            cands = feasible_microkernels(self.template, self.variant)
+            if micro_kernel is None:
+                if not cands:
+                    raise ValueError(
+                        f"{self.template.name}: no feasible micro-kernel to "
+                        f"calibrate with")
+                micro_kernel = cands[0]
+            self.micro_kernel = micro_kernel
+        else:
+            self.variant = None
+            self.micro_kernel = None
+
+    # -- design matrices ------------------------------------------------------
+
+    def _coerce_problems(self, problems) -> list:
+        from repro.gemm.api import GemmProblem
+        default = "int8" if self.model == "blis" else "bf16"
+        return [GemmProblem.coerce(p, default_dtype=default)
+                for p in problems]
+
+    def _coerce_mks(self, probs, micro_kernels) -> list:
+        from repro.core.variants import MicroKernel
+        if micro_kernels is None:
+            return [self.micro_kernel] * len(probs)
+        mks = [mk if isinstance(mk, MicroKernel)
+               else MicroKernel(int(mk[0]), int(mk[1]))
+               for mk in micro_kernels]
+        if len(mks) != len(probs):
+            raise ValueError(f"{len(probs)} problems vs {len(mks)} "
+                             f"micro-kernels")
+        return mks
+
+    def design_matrix(self, problems,
+                      micro_kernels=None) -> tuple[np.ndarray, list[str]]:
+        """(samples x columns) coefficients of the inverse rates, built with
+        the batched engines — one vectorized evaluation for all samples.
+
+        For the BLIS model, ``micro_kernels`` optionally gives a per-sample
+        micro-kernel.  Calibration samples should span several micro-kernel
+        shapes: under a single one every register-streaming term and the
+        arithmetic term are exactly proportional to ``m*n*k``, which makes
+        the system rank-deficient (the paper's calibration likewise varies
+        the micro-kernel across its experiments).
+        """
+        probs = self._coerce_problems(problems)
+        if self.model == "blis":
+            return self._design_blis_batch(
+                probs, self._coerce_mks(probs, micro_kernels))
+        if micro_kernels is not None:
+            raise ValueError("micro_kernels only applies to the blis model")
+        return self._design_pallas_batch(probs)
+
+    def _design_blis_batch(self, probs, mks):
+        from repro.core.variants import (
+            derive_blocking_batch,
+            traffic_terms_batch,
+        )
+
+        mach = self.template
+        # per-sample (P,) arrays: micro-kernel dims align elementwise with
+        # the problems, so every batched closed form broadcasts to (P,).
+        rows = np.array([mk.rows for mk in mks], np.int64)
+        cols = np.array([mk.cols for mk in mks], np.int64)
+        m = np.array([p.m for p in probs], np.int64)
+        n = np.array([p.n for p in probs], np.int64)
+        k = np.array([p.k for p in probs], np.int64)
+        s = np.array([p.elem_bytes for p in probs], np.int64)
+        blk = derive_blocking_batch(self.variant, rows, cols, mach,
+                                    m, n, k, s)
+        terms = traffic_terms_batch(self.variant, rows, cols, blk,
+                                    m, n, k, s, policy=self.policy)
+        cols_map: dict[str, np.ndarray] = {}
+        for t in terms:
+            key = (f"{_RATE}{mach.level(t.origin)}->"
+                   f"{mach.level(t.dest)}")
+            coeff = np.broadcast_to(t.bytes, (len(probs),)).astype(np.float64)
+            if t.chunk is not None:
+                # time = bytes / (rate * chunk/ref): fold the chunk scaling
+                # into the coefficient of x = 1/rate.
+                chunk = np.broadcast_to(np.asarray(t.chunk, np.float64),
+                                        (len(probs),))
+                coeff = coeff * (mach.reference_chunk / chunk)
+            cols_map[key] = cols_map.get(key, 0.0) + coeff
+        for dt in sorted({p.dtype for p in probs}):
+            sel = np.array([p.dtype == dt for p in probs], np.float64)
+            cols_map[f"{_ARITH}{dt}"] = sel * np.array(
+                [p.flops for p in probs], np.float64)
+        names = list(cols_map)
+        return np.stack([cols_map[c] for c in names], axis=1), names
+
+    def _design_pallas_batch(self, probs):
+        from repro.core.autotune import tune_batch
+        from repro.core.tpu_model import (
+            DTYPE_BYTES,
+            GridOrder,
+            SUBLANE,
+            estimate_batch,
+            machine_peak,
+        )
+
+        mach = self.template
+        shapes = [p.as_shape() for p in probs]
+        tiles = [d.tile for d in tune_batch(shapes, machine=mach)]
+        m = np.array([p.m for p in probs], np.int64)
+        n = np.array([p.n for p in probs], np.int64)
+        k = np.array([p.k for p in probs], np.int64)
+        s = np.array([DTYPE_BYTES[p.dtype] for p in probs], np.int64)
+        sub = np.array([SUBLANE[p.dtype] for p in probs], np.int64)
+        peak = np.array([machine_peak(mach, p.dtype) for p in probs],
+                        np.float64)
+        bm = np.array([t.bm for t in tiles], np.int64)
+        bn = np.array([t.bn for t in tiles], np.int64)
+        bk = np.array([t.bk for t in tiles], np.int64)
+        inner = np.array([t.order is GridOrder.K_INNER for t in tiles], bool)
+        costs = estimate_batch(m, n, k, s, sub, peak, bm, bn, bk, inner,
+                               machine=mach)
+        cols_map: dict[str, np.ndarray] = {
+            f"{_RATE}{mach.level('M')}->{mach.level('L1')}":
+                np.asarray(costs.hbm_bytes, np.float64),
+            f"{_RATE}{mach.level('L1')}->{mach.level('R')}":
+                np.asarray(costs.vmem_bytes, np.float64),
+        }
+        # t_compute = flops / (peak * eff) -> coefficient of 1/peak.
+        flops = 2.0 * (m * n * k).astype(np.float64)
+        for dt in sorted({p.dtype for p in probs}):
+            sel = np.array([p.dtype == dt for p in probs], np.float64)
+            tag = "bf16" if dt == "f32" else dt
+            cols_map[f"{_ARITH}{tag}"] = cols_map.get(
+                f"{_ARITH}{tag}", 0.0) + sel * flops / np.asarray(
+                    costs.mxu_efficiency, np.float64)
+        names = list(cols_map)
+        return np.stack([cols_map[c] for c in names], axis=1), names
+
+    def design_matrix_scalar(self, problems,
+                             micro_kernels=None
+                             ) -> tuple[np.ndarray, list[str]]:
+        """The per-sample scalar-loop design matrix, kept as the reference
+        oracle the vectorized :meth:`design_matrix` must agree with
+        (the tests assert exact equality)."""
+        probs = self._coerce_problems(problems)
+        mach = self.template
+        cols_map: dict[str, list[float]] = {}
+        rows_acc: list[dict[str, float]] = []
+        if self.model == "blis":
+            from repro.core.variants import derive_blocking, traffic_terms
+            mks = self._coerce_mks(probs, micro_kernels)
+            for p, mk in zip(probs, mks):
+                pr = p.as_problem()
+                blk = derive_blocking(self.variant, mk, mach, pr)
+                row: dict[str, float] = {}
+                for t in traffic_terms(self.variant, mk, blk,
+                                       pr, policy=self.policy):
+                    key = (f"{_RATE}{mach.level(t.origin)}->"
+                           f"{mach.level(t.dest)}")
+                    coeff = t.bytes
+                    if t.chunk is not None:
+                        coeff = coeff * (mach.reference_chunk / t.chunk)
+                    row[key] = row.get(key, 0.0) + coeff
+                row[f"{_ARITH}{p.dtype}"] = pr.flops
+                rows_acc.append(row)
+        else:
+            from repro.core.autotune import tune_batch
+            from repro.core.tpu_model import estimate
+            for p in probs:
+                shape = p.as_shape()
+                tile = tune_batch([shape], machine=mach)[0].tile
+                c = estimate(shape, tile, mach)
+                tag = "bf16" if p.dtype == "f32" else p.dtype
+                rows_acc.append({
+                    f"{_RATE}{mach.level('M')}->{mach.level('L1')}":
+                        c.hbm_bytes,
+                    f"{_RATE}{mach.level('L1')}->{mach.level('R')}":
+                        c.vmem_bytes,
+                    f"{_ARITH}{tag}": shape.flops / c.mxu_efficiency,
+                })
+        for row in rows_acc:
+            for key in row:
+                cols_map.setdefault(key, [])
+        names = list(cols_map)
+        A = np.zeros((len(rows_acc), len(names)))
+        for i, row in enumerate(rows_acc):
+            for j, key in enumerate(names):
+                A[i, j] = row.get(key, 0.0)
+        return A, names
+
+    # -- the fit --------------------------------------------------------------
+
+    def fit(self, problems, seconds: Sequence[float], *, date: str | None,
+            micro_kernels=None, name: str | None = None,
+            register: bool = False, manifest_dir: str | None = None,
+            extra_provenance: Mapping[str, Any] | None = None,
+            ) -> tuple[MachineSpec, FitReport]:
+        """One vectorized least-squares solve over all samples.
+
+        ``date`` is required (pass None explicitly to record an undated
+        fit) — the Calibrator never invents timestamps.  For the BLIS
+        model pass per-sample ``micro_kernels`` spanning several shapes
+        (see :meth:`design_matrix`).  Returns the fitted spec and the
+        :class:`FitReport`; with ``register=True`` the spec lands in the
+        registry (source ``"calibrated"``), with ``manifest_dir`` it is
+        persisted as ``<dir>/<name>.json``.
+        """
+        t = np.asarray(list(seconds), np.float64)
+        A, columns = self.design_matrix(problems, micro_kernels)
+        if A.shape[0] != t.shape[0]:
+            raise ValueError(f"{A.shape[0]} problems vs {t.shape[0]} "
+                             f"measured times")
+        if A.shape[0] < A.shape[1]:
+            raise ValueError(
+                f"under-determined fit: {A.shape[0]} samples for "
+                f"{A.shape[1]} rate columns {columns}")
+        x, _, rank, _ = np.linalg.lstsq(A, t, rcond=None)
+        if rank < len(columns):
+            raise ValueError(
+                f"rank-deficient fit (rank {rank} < {len(columns)} columns "
+                f"{columns}): the samples cannot separate the rates — vary "
+                f"the micro-kernels and problem shapes (see design_matrix)")
+        if np.any(x <= 0.0):
+            bad = [c for c, xi in zip(columns, x) if xi <= 0.0]
+            raise ValueError(
+                f"fit produced non-positive inverse rates for {bad}; the "
+                f"measured times are inconsistent with the cost model — "
+                f"not registering a garbage spec")
+        residual = float(np.sqrt(np.mean((A @ x - t) ** 2)))
+        report = FitReport(columns=columns, inverse_rates=x,
+                           residual_rms_s=residual, samples=len(t),
+                           date=date)
+
+        rates = dict(self.template.transfer_rates)
+        arith = dict(self.template.arith_rate)
+        for col, xi in zip(columns, x):
+            if col.startswith(_RATE):
+                o, _, d = col[len(_RATE):].partition("->")
+                rates[(o, d)] = 1.0 / xi
+            else:
+                arith[col[len(_ARITH):]] = 1.0 / xi
+        prov: dict[str, Any] = {"base": self.template.name,
+                                "fit": report.as_provenance()}
+        if self.model == "blis":
+            coerced = self._coerce_mks([None] * len(t), micro_kernels)
+            mks = sorted({str(mk) for mk in coerced})
+            prov["fit"]["cost_model"] = {
+                "model": "blis", "variant": self.variant.value,
+                "micro_kernels": mks, "policy": self.policy}
+        else:
+            prov["fit"]["cost_model"] = {"model": "pallas"}
+        if extra_provenance:
+            prov.update(extra_provenance)
+        spec = dataclasses.replace(
+            self.template, name=name or self.template.name,
+            transfer_rates=rates, arith_rate=arith, provenance=prov)
+        spec.validate()
+        if register:
+            _registry.register(spec, overwrite=True, source="calibrated")
+        if manifest_dir:
+            spec.to_manifest(os.path.join(manifest_dir, f"{spec.name}.json"))
+        return spec, report
+
+    # -- the paper's micro-experiments ---------------------------------------
+
+    @classmethod
+    def measure_host(cls, name: str = "host-cpu", *, date: str | None = None,
+                     register: bool = False,
+                     manifest_dir: str | None = None) -> MachineSpec:
+        """Run the paper's §3.2 micro-experiments on this host and assemble
+        a seed :class:`MachineSpec` (the redesigned ``calibrate_host``).
+
+        The spec keeps the host-cpu template's geometry; the measured
+        packing / copy / arithmetic rates replace the placeholder rates,
+        with calibration provenance attached.
+        """
+        from repro.core.calibrate import (
+            measure_arith_rate,
+            measure_copy_rate,
+            measure_packing_rate,
+        )
+
+        pack4 = measure_packing_rate(4)
+        copy = measure_copy_rate()
+        arith = measure_arith_rate()
+        template = _registry.get("host-cpu")
+        spec = dataclasses.replace(
+            template,
+            name=name,
+            transfer_rates={
+                ("M", "M"): pack4,
+                ("M", "L2"): pack4,
+                ("L2", "M"): pack4,
+                ("M", "L1"): copy,
+                ("M", "R"): copy,
+                ("L1", "R"): copy * 4,
+                ("L2", "R"): copy * 2,
+            },
+            arith_rate={"int8": arith, "f32": arith},
+            provenance={
+                "base": template.name,
+                "calibration": {
+                    "method": "micro-experiments (paper 3.2)",
+                    "date": date,
+                    "measured": {"pack_r4_Bps": pack4, "copy_Bps": copy,
+                                 "arith_ops": arith},
+                },
+            })
+        spec.validate()
+        if register:
+            _registry.register(spec, overwrite=True, source="calibrated")
+        if manifest_dir:
+            spec.to_manifest(os.path.join(manifest_dir, f"{spec.name}.json"))
+        return spec

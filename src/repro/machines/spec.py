@@ -1,0 +1,319 @@
+"""The serializable machine schema — a processor as a small set of rates.
+
+The paper's portability claim (§1, §3.2) is that one analytic GEMM simulator
+covers a *"highly heterogeneous zoo"* of edge processors because a machine is
+nothing but a few calibrated numbers: per-level scratchpad capacities,
+point-to-point transfer rates (Table 1), a per-dtype arithmetic-rate table,
+and the register-file geometry.  This module makes that literal:
+:class:`MachineSpec` is a frozen, JSON-serializable value object with a
+validated schema, and every machine the framework knows about is a manifest
+under ``repro/machines/zoo/`` — adding a processor is dropping a JSON file,
+not editing code.
+
+Level-name indirection: the variant cost models (``core/variants.py``,
+``core/simulator.py``) address the canonical role set ``{"M", "L2", "L1",
+"R"}``.  A machine whose physical hierarchy differs declares
+``level_aliases`` mapping role names onto its real levels (e.g. a two-level
+Cortex-M-class part maps the ``"L2"`` role onto ``"L1"``; the TPU maps it
+onto VMEM), and :meth:`MachineSpec.capacity` / :meth:`MachineSpec.rate`
+resolve through the alias table — the simulators never special-case a
+hierarchy again.
+
+Derived machines are first-class: :meth:`scaled`, :meth:`with_capacities`
+and :meth:`with_dtype_rates` stamp out hypothetical zoo members (ablations,
+what-if parts) with provenance recording the base spec and the transform.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import math
+import os
+import re
+from typing import Any, Mapping
+
+SCHEMA = "repro.machines/v1"
+
+#: canonical memory-level roles addressed by the variant cost models.
+CANONICAL_ROLES = ("M", "L2", "L1", "R")
+
+_DTYPE_TAG = re.compile(r"^[a-z][a-z0-9_]*$")
+_RATE_SEP = "->"
+
+
+class SpecValidationError(ValueError):
+    """A manifest / MachineSpec that violates the schema."""
+
+
+@dataclasses.dataclass(frozen=True)
+class MachineSpec:
+    """A machine for the blocked-GEMM cost model.
+
+    ``transfer_rates`` maps ``(origin, destination)`` level names to bytes/s.
+    Level names are free-form but the variant cost models address the
+    canonical role set ``{"M", "L2", "L1", "R"}``; machines whose hierarchy
+    differs resolve roles through ``level_aliases`` (see module docstring).
+
+    Rates follow the paper's convention: *bytes per second* for transfers and
+    *ops per second* for arithmetic (1 MAC = 2 ops), keyed by dtype tag.
+    Packing rates are calibrated at ``reference_chunk`` contiguous elements
+    and scale linearly with the chunk size (paper §3.2).
+    """
+
+    name: str
+    # capacities in bytes, by level name (registers expressed in bytes too).
+    capacities: Mapping[str, int]
+    # (origin, dest) -> bytes/s, calibrated at the reference chunk size.
+    transfer_rates: Mapping[tuple[str, str], float]
+    # arithmetic throughput, ops/s (1 MAC = 2 ops), by dtype tag.
+    arith_rate: Mapping[str, float]
+    # chunk size (elements) at which packing rates were calibrated.
+    reference_chunk: int = 4
+    # element size in bytes for the default dtype.
+    elem_bytes: int = 1
+    # number of (SIMD) registers and lanes per register, for micro-kernel
+    # feasibility checks.
+    num_vector_registers: int = 32
+    register_lanes: int = 4
+    # declared level names, outermost first (derived from capacities when
+    # omitted).
+    levels: tuple[str, ...] = ()
+    # canonical-role -> physical-level indirection (e.g. {"L2": "L1"}).
+    level_aliases: Mapping[str, str] = dataclasses.field(default_factory=dict)
+    # where this spec came from: calibration fit, derivation, manifest note.
+    provenance: Mapping[str, Any] = dataclasses.field(default_factory=dict)
+
+    def __post_init__(self):
+        if not self.levels:
+            object.__setattr__(self, "levels", tuple(self.capacities))
+
+    # -- level / rate resolution ---------------------------------------------
+
+    def level(self, role: str) -> str:
+        """Resolve a canonical role name to this machine's physical level."""
+        return self.level_aliases.get(role, role)
+
+    def rate(self, origin: str, dest: str) -> float:
+        o, d = self.level(origin), self.level(dest)
+        try:
+            return self.transfer_rates[(o, d)]
+        except KeyError as e:
+            raise KeyError(
+                f"{self.name}: no calibrated transfer rate {origin}->{dest}"
+            ) from e
+
+    def packing_rate(self, origin: str, dest: str, chunk_elems: int) -> float:
+        """Packing rate scaled by the contiguous-chunk size (paper §3.2)."""
+        scale = chunk_elems / float(self.reference_chunk)
+        return self.rate(origin, dest) * scale
+
+    def capacity(self, level: str) -> int:
+        return int(self.capacities[self.level(level)])
+
+    def fingerprint(self) -> str:
+        """Content identity for process-level caches.
+
+        Two specs sharing a registry name can carry different rate tables
+        (derived transforms, ``register(overwrite=True)``, a Calibrator
+        refit), so plan/tune caches key on ``name@fingerprint`` rather than
+        the name alone.  Provenance is excluded — it never affects a
+        prediction.
+        """
+        fp = self.__dict__.get("_fingerprint")
+        if fp is None:
+            payload = {k: v for k, v in self.to_json().items()
+                       if k != "provenance"}
+            fp = hashlib.sha1(json.dumps(payload, sort_keys=True)
+                              .encode()).hexdigest()[:16]
+            object.__setattr__(self, "_fingerprint", fp)
+        return fp
+
+    @property
+    def cache_token(self) -> str:
+        """``name@fingerprint`` — the cache-key form of this machine."""
+        return f"{self.name}@{self.fingerprint()}"
+
+    # -- validation ----------------------------------------------------------
+
+    def validate(self) -> "MachineSpec":
+        """Schema-check the spec; raises :class:`SpecValidationError`.
+
+        Checks level-name consistency (every capacity / rate endpoint /
+        alias target is a declared level; every canonical role resolves),
+        rate-key shape and positivity, and the dtype-rate table.
+        """
+        err = SpecValidationError
+        if not self.name or not isinstance(self.name, str) \
+                or self.name != self.name.strip() or "/" in self.name:
+            raise err(f"bad machine name {self.name!r}")
+        levels = tuple(self.levels)
+        if not levels or len(set(levels)) != len(levels):
+            raise err(f"{self.name}: levels must be non-empty and unique, "
+                      f"got {levels!r}")
+        if set(self.capacities) != set(levels):
+            raise err(f"{self.name}: capacities keys {sorted(self.capacities)}"
+                      f" != declared levels {sorted(levels)}")
+        for lv, cap in self.capacities.items():
+            if int(cap) <= 0:
+                raise err(f"{self.name}: capacity[{lv}] must be positive")
+        for key, rate in self.transfer_rates.items():
+            if not (isinstance(key, tuple) and len(key) == 2):
+                raise err(f"{self.name}: transfer-rate key {key!r} is not "
+                          f"an (origin, dest) pair")
+            o, d = key
+            if o not in levels or d not in levels:
+                raise err(f"{self.name}: rate key {o}->{d} references an "
+                          f"undeclared level (have {levels})")
+            if not (isinstance(rate, (int, float)) and math.isfinite(rate)
+                    and rate > 0):
+                raise err(f"{self.name}: rate {o}->{d} must be a positive "
+                          f"finite number, got {rate!r}")
+        for role, target in self.level_aliases.items():
+            if role in levels:
+                raise err(f"{self.name}: alias {role!r} shadows a declared "
+                          f"level")
+            if target not in levels:
+                raise err(f"{self.name}: alias {role}->{target} targets an "
+                          f"undeclared level")
+        for role in CANONICAL_ROLES:
+            if self.level(role) not in levels:
+                raise err(f"{self.name}: canonical role {role!r} resolves to "
+                          f"no declared level; add it to levels or "
+                          f"level_aliases")
+        if not self.arith_rate:
+            raise err(f"{self.name}: arith_rate table is empty")
+        for tag, rate in self.arith_rate.items():
+            if not _DTYPE_TAG.match(tag or ""):
+                raise err(f"{self.name}: bad dtype tag {tag!r} in arith_rate")
+            if not (isinstance(rate, (int, float)) and math.isfinite(rate)
+                    and rate > 0):
+                raise err(f"{self.name}: arith_rate[{tag}] must be a "
+                          f"positive finite number, got {rate!r}")
+        for field, lo in (("reference_chunk", 1), ("elem_bytes", 1),
+                          ("num_vector_registers", 1), ("register_lanes", 1)):
+            if int(getattr(self, field)) < lo:
+                raise err(f"{self.name}: {field} must be >= {lo}")
+        return self
+
+    # -- serialization -------------------------------------------------------
+
+    def to_json(self) -> dict:
+        """The manifest form; round-trips losslessly through
+        :meth:`from_json` (floats serialize at full repr precision)."""
+        d: dict[str, Any] = {
+            "schema": SCHEMA,
+            "name": self.name,
+            "levels": list(self.levels),
+            "capacities": {k: int(v) for k, v in self.capacities.items()},
+            "transfer_rates": {f"{o}{_RATE_SEP}{dst}": float(r)
+                               for (o, dst), r in self.transfer_rates.items()},
+            "arith_rate": {k: float(v) for k, v in self.arith_rate.items()},
+            "reference_chunk": int(self.reference_chunk),
+            "elem_bytes": int(self.elem_bytes),
+            "num_vector_registers": int(self.num_vector_registers),
+            "register_lanes": int(self.register_lanes),
+        }
+        if self.level_aliases:
+            d["level_aliases"] = dict(self.level_aliases)
+        if self.provenance:
+            d["provenance"] = dict(self.provenance)
+        return d
+
+    @classmethod
+    def from_json(cls, d: Mapping[str, Any]) -> "MachineSpec":
+        schema = d.get("schema", SCHEMA)
+        if schema != SCHEMA:
+            raise SpecValidationError(
+                f"unknown machine-manifest schema {schema!r} "
+                f"(expected {SCHEMA!r})")
+        try:
+            rates = {}
+            for key, rate in dict(d["transfer_rates"]).items():
+                if _RATE_SEP not in key:
+                    raise SpecValidationError(
+                        f"bad transfer-rate key {key!r}; expected "
+                        f"'ORIGIN{_RATE_SEP}DEST'")
+                o, _, dst = key.partition(_RATE_SEP)
+                rates[(o, dst)] = float(rate)
+            spec = cls(
+                name=d["name"],
+                capacities={k: int(v) for k, v in d["capacities"].items()},
+                transfer_rates=rates,
+                arith_rate={k: float(v)
+                            for k, v in dict(d["arith_rate"]).items()},
+                reference_chunk=int(d.get("reference_chunk", 4)),
+                elem_bytes=int(d.get("elem_bytes", 1)),
+                num_vector_registers=int(d.get("num_vector_registers", 32)),
+                register_lanes=int(d.get("register_lanes", 4)),
+                levels=tuple(d.get("levels") or ()),
+                level_aliases=dict(d.get("level_aliases") or {}),
+                provenance=dict(d.get("provenance") or {}),
+            )
+        except (KeyError, TypeError, ValueError) as e:
+            if isinstance(e, SpecValidationError):
+                raise
+            raise SpecValidationError(
+                f"malformed machine manifest {d.get('name', '?')!r}: {e}"
+            ) from e
+        return spec.validate()
+
+    def to_manifest(self, path: str) -> str:
+        """Write the manifest JSON; returns the path written."""
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        tmp = path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(self.to_json(), f, indent=1)
+            f.write("\n")
+        os.replace(tmp, path)
+        return path
+
+    @classmethod
+    def from_manifest(cls, path: str) -> "MachineSpec":
+        with open(path) as f:
+            return cls.from_json(json.load(f))
+
+    # -- derived-machine transforms ------------------------------------------
+
+    def _derive(self, name: str | None, default_suffix: str,
+                transform: Mapping[str, Any],
+                **changes: Any) -> "MachineSpec":
+        prov = {"base": self.name, "transform": dict(transform)}
+        return dataclasses.replace(
+            self, name=name or f"{self.name}{default_suffix}",
+            provenance=prov, **changes)
+
+    def scaled(self, *, arith: float = 1.0, bw: float = 1.0,
+               name: str | None = None) -> "MachineSpec":
+        """A hypothetical machine with every arithmetic rate scaled by
+        ``arith`` and every transfer rate scaled by ``bw``."""
+        if arith <= 0 or bw <= 0:
+            raise ValueError("scale factors must be positive")
+        return self._derive(
+            name, f"+arith{arith:g}x+bw{bw:g}x",
+            {"scaled": {"arith": arith, "bw": bw}},
+            transfer_rates={k: r * bw for k, r in self.transfer_rates.items()},
+            arith_rate={k: r * arith for k, r in self.arith_rate.items()},
+        )
+
+    def with_capacities(self, name: str | None = None,
+                        **caps: int) -> "MachineSpec":
+        """Override per-level capacities (bytes), e.g.
+        ``spec.with_capacities(L1=32 * 1024)``."""
+        unknown = set(caps) - set(self.levels)
+        if unknown:
+            raise KeyError(f"{self.name}: no such level(s) {sorted(unknown)}; "
+                           f"have {list(self.levels)}")
+        merged = dict(self.capacities)
+        merged.update({k: int(v) for k, v in caps.items()})
+        return self._derive(name, "+caps", {"with_capacities": dict(caps)},
+                            capacities=merged)
+
+    def with_dtype_rates(self, name: str | None = None,
+                         **rates: float) -> "MachineSpec":
+        """Merge entries into the per-dtype arithmetic-rate table, e.g.
+        ``spec.with_dtype_rates(int4=2 * spec.arith_rate["int8"])``."""
+        merged = dict(self.arith_rate)
+        merged.update({k: float(v) for k, v in rates.items()})
+        return self._derive(name, "+dtypes", {"with_dtype_rates": dict(rates)},
+                            arith_rate=merged)

@@ -70,22 +70,100 @@ class ServingEngine:
                                donate_argnums=(0,))
         # Frozen GEMM plans for this engine's decode workload (M = the slot
         # pool size): the paper's predict-before-run loop applied to serving,
-        # surfaced through perf_report().  plan_model_gemms is a bulk
-        # operation (one batched lattice evaluation over the deduped decode
-        # shapes).  On TPU the decode step's pallas plans reach the same
-        # tiles through TileTuner's shared search cache.
-        self.gemm_plans = gemm_api.plan_model_gemms(
-            lm.cfg, tokens=max_batch, backend="analytic-tpu")
+        # surfaced through perf_report().  Planned lazily on first access so
+        # autoconfigure() can install its sweep-chosen plans without the
+        # constructor paying for a default pass it would discard;
+        # plan_model_gemms is a bulk operation (one batched lattice
+        # evaluation over the deduped decode shapes).  On TPU the decode
+        # step's pallas plans reach the same tiles through TileTuner's
+        # shared search cache.
+        self._gemm_plans: list | None = None
+        # populated by autoconfigure(): the sweep-chosen operating point.
+        self.autoconfig: dict | None = None
+
+    @property
+    def gemm_plans(self) -> list:
+        if self._gemm_plans is None:
+            self._gemm_plans = gemm_api.plan_model_gemms(
+                self.lm.cfg, tokens=self.max_batch, backend="analytic-tpu")
+        return self._gemm_plans
+
+    @gemm_plans.setter
+    def gemm_plans(self, plans) -> None:
+        self._gemm_plans = list(plans)
+
+    @classmethod
+    def autoconfigure(cls, lm: LM, params, *, machine=None,
+                      dtypes=("bf16",), batches=(1, 2, 4, 8, 16),
+                      max_len: int = 512,
+                      backend: str = "analytic-tpu") -> "ServingEngine":
+        """Pick ``max_batch`` (and the frozen decode plans) by sweeping the
+        decode-batch x dtype (x machine) grid instead of freezing defaults.
+
+        For every candidate batch, the model's decode GEMM shapes go
+        through ``repro.gemm.sweep`` over the given dtypes and machines
+        (names, specs, or ``"zoo/*"`` globs — see ``repro.machines``); the
+        operating point maximising predicted tokens/second wins, its sweep
+        rows become the engine's frozen ``gemm_plans``, and the whole grid
+        is kept in ``engine.autoconfig`` for ``perf_report``.
+
+        The dtype axis is an analytic what-if over the machine's rate
+        table; since the engine really computes in the model's configured
+        dtype, the *operating point* (and the frozen plans / headline
+        tokens-per-second) is chosen among rows of that native dtype —
+        what-if dtypes inform the recorded grid only.  If the native dtype
+        is not among ``dtypes``, the overall best row wins (an explicit
+        choice to configure against a foreign dtype).
+        """
+        from repro.core.autotune import model_gemm_shapes
+        from repro.gemm.backends import dtype_tag
+
+        native = dtype_tag(lm.cfg.compute_dtype)
+        grid = []
+        for b in batches:
+            shapes = model_gemm_shapes(lm.cfg, tokens=b)
+            res = gemm_api.sweep(shapes, machines=machine,
+                                 backends=[backend], dtypes=list(dtypes))
+            by_point: dict[tuple, list] = {}
+            for r in res.rows:
+                by_point.setdefault((r.machine, r.problem.dtype),
+                                    []).append(r)
+            for (ma, dt), rows in sorted(by_point.items()):
+                step = sum(r.seconds for r in rows)
+                grid.append({
+                    "max_batch": b, "machine": ma, "dtype": dt,
+                    "predicted_gemm_seconds_per_step": step,
+                    "predicted_tokens_per_second":
+                        (b / step) if step else float("inf"),
+                    "rows": rows,
+                })
+        candidates = [g for g in grid if g["dtype"] == native] or grid
+        best = max(candidates, key=lambda g: g["predicted_tokens_per_second"])
+        eng = cls(lm, params, max_batch=best["max_batch"], max_len=max_len)
+        eng.gemm_plans = [r.plan for r in best["rows"]]
+        eng.autoconfig = {
+            "max_batch": best["max_batch"], "machine": best["machine"],
+            "dtype": best["dtype"], "native_dtype": native,
+            "backend": backend,
+            "predicted_tokens_per_second":
+                best["predicted_tokens_per_second"],
+            "grid": [{k: v for k, v in g.items() if k != "rows"}
+                     for g in grid],
+        }
+        return eng
 
     def perf_report(self) -> dict:
         """Predicted per-decode-step GEMM cost from the frozen plans."""
         total = sum(p.predicted_seconds for p in self.gemm_plans)
-        return {
+        report = {
             "predicted_gemm_seconds_per_step": total,
             "predicted_tokens_per_second":
                 (self.max_batch / total) if total else float("inf"),
             "plans": [p.describe() for p in self.gemm_plans],
         }
+        if self.autoconfig is not None:
+            report["autoconfig"] = self.autoconfig
+        return report
 
     # -- jitted pieces --------------------------------------------------------
     def _decode_impl(self, params, caches, tokens, pos_vec, active):

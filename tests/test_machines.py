@@ -1,0 +1,575 @@
+"""The declarative machine zoo: manifests, registry, transforms, Calibrator.
+
+Acceptance (ISSUE 3): `repro.machines.get("gap8-fc")` loaded from its JSON
+manifest produces bit-identical plans (selections and predicted totals) to
+the legacy hard-coded constant across the Table-2 workload, sweeps run
+end-to-end over >= 4 registered zoo machines, and the legacy
+`core.hardware` imports keep working through deprecation shims.
+"""
+import dataclasses
+import json
+import os
+import warnings
+
+import numpy as np
+import pytest
+
+from repro import gemm, machines
+from repro.core.mobilenet import TABLE2
+from repro.core.simulator import search_batch, simulate
+from repro.core.variants import MicroKernel, Variant
+from repro.machines import MachineSpec, SpecValidationError
+
+MB = 1.0e6
+KiB = 1024
+MiB = 1024 * 1024
+
+# The paper's Table-1 numbers, restated literally: the manifest must stay
+# bit-identical to the published calibration, independent of the zoo file.
+LEGACY_GAP8 = MachineSpec(
+    name="gap8-fc",
+    capacities={"M": 8 * MiB, "L2": 512 * KiB, "L1": 16 * KiB, "R": 32 * 4},
+    transfer_rates={
+        ("M", "M"): 1.62e0 * MB,
+        ("M", "L2"): 5.30e-1 * MB,
+        ("L2", "M"): 6.54e-1 * MB,
+        ("M", "L1"): 8.81e0 * MB,
+        ("M", "R"): 4.87e-1 * MB,
+        ("L1", "R"): 1.78e2 * MB,
+        ("L2", "R"): 7.18e0 * MB,
+    },
+    arith_rate={"int8": 5.64e9},
+    reference_chunk=4, elem_bytes=1,
+    num_vector_registers=32, register_lanes=4,
+)
+
+
+@pytest.fixture(autouse=True)
+def _clean_registry():
+    before = set(machines.list_machines())
+    yield
+    for name in set(machines.list_machines()) - before:
+        machines.unregister(name)
+    machines.load_zoo()          # restore any zoo entry a test overwrote
+
+
+# ---------------------------------------------------------------------------
+# Manifest round trips + bit-identity vs the legacy constants
+# ---------------------------------------------------------------------------
+
+
+def test_zoo_manifests_roundtrip_to_json():
+    names = machines.list_machines("zoo/*")
+    assert len(names) >= 6
+    for name in names:
+        spec = machines.get(name)
+        assert MachineSpec.from_json(spec.to_json()) == spec
+
+
+def test_manifest_roundtrip_through_file(tmp_path):
+    spec = machines.get("gap9-fc")
+    path = spec.to_manifest(str(tmp_path / "gap9.json"))
+    assert MachineSpec.from_manifest(path) == spec
+
+
+def test_gap8_manifest_matches_paper_table1():
+    zoo = machines.get("gap8-fc")
+    assert dict(zoo.transfer_rates) == dict(LEGACY_GAP8.transfer_rates)
+    assert dict(zoo.arith_rate) == dict(LEGACY_GAP8.arith_rate)
+    assert {k: int(v) for k, v in zoo.capacities.items()} == \
+        {k: int(v) for k, v in LEGACY_GAP8.capacities.items()}
+    assert (zoo.reference_chunk, zoo.elem_bytes, zoo.num_vector_registers,
+            zoo.register_lanes) == (4, 1, 32, 4)
+
+
+def test_gap8_manifest_plans_bit_identical_to_legacy_table2():
+    """Acceptance: the manifest-loaded machine reproduces the legacy
+    constant's full Table-2 search bit-for-bit (selections AND totals)."""
+    probs = [row.problem for row in TABLE2]
+    got = search_batch(machines.get("gap8-fc"), probs)
+    want = search_batch(LEGACY_GAP8, probs)
+    for g, w in zip(got, want):
+        assert g.variant is w.variant
+        assert g.micro_kernel == w.micro_kernel
+        assert g.blocking == w.blocking
+        assert g.total == w.total           # bit-identical, not approx
+
+
+def test_tpu_manifest_matches_legacy_roofline_constants():
+    from repro.core.hardware import (V5E_HBM_BW, V5E_HBM_BYTES,
+                                     V5E_PEAK_BF16, V5E_PEAK_INT8,
+                                     V5E_VMEM_BW, V5E_VMEM_BYTES)
+    zoo = machines.get("tpu-v5e")
+    assert zoo.arith_rate == {"bf16": V5E_PEAK_BF16, "int8": V5E_PEAK_INT8,
+                              "f32": V5E_PEAK_BF16 / 2}
+    assert zoo.rate("M", "L1") == V5E_HBM_BW
+    assert zoo.rate("L1", "R") == V5E_VMEM_BW
+    assert zoo.capacity("M") == int(V5E_HBM_BYTES)
+    assert zoo.capacity("L1") == int(V5E_VMEM_BYTES)
+    # the L2 role collapses onto VMEM through the alias table
+    assert zoo.level("L2") == "L1"
+    assert zoo.capacity("L2") == int(V5E_VMEM_BYTES)
+
+
+def test_tpu_manifest_tunes_identically_to_legacy(monkeypatch):
+    from repro.core.autotune import clear_tune_cache, tune_batch
+    from repro.core.tpu_model import GemmShape
+    legacy = dataclasses.replace(
+        machines.get("tpu-v5e"), name="tpu-v5e-legacy-check")
+    shapes = [GemmShape(4096, 11008, 4096, "bf16"),
+              GemmShape(100, 70, 130, "f32"), GemmShape(8, 512, 64, "int8")]
+    clear_tune_cache()
+    a = tune_batch(shapes, machine=machines.get("tpu-v5e"), cache=False)
+    b = tune_batch(shapes, machine=legacy, cache=False)
+    for x, y in zip(a, b):
+        assert x.tile == y.tile and x.seconds == y.seconds
+
+
+# ---------------------------------------------------------------------------
+# Registry semantics
+# ---------------------------------------------------------------------------
+
+
+def test_get_unknown_machine_lists_known():
+    with pytest.raises(KeyError, match="unknown machine 'nope'"):
+        machines.get("nope")
+
+
+def test_register_duplicate_requires_overwrite():
+    spec = machines.get("gap8-fc").scaled(arith=1.5, name="dup-test")
+    machines.register(spec)
+    with pytest.raises(ValueError, match="already registered"):
+        machines.register(spec)
+    machines.register(spec, overwrite=True)
+    assert machines.source_of("dup-test") == "runtime"
+
+
+def test_register_validates():
+    bad = dataclasses.replace(machines.get("gap8-fc"), name="bad-rate",
+                              arith_rate={"int8": -1.0})
+    with pytest.raises(SpecValidationError):
+        machines.register(bad)
+
+
+def test_alias_resolution_and_errors():
+    machines.alias("edge-default", "gap8-fc")
+    assert machines.get("edge-default") is machines.get("gap8-fc")
+    with pytest.raises(KeyError):
+        machines.alias("x", "not-a-machine")
+    with pytest.raises(ValueError, match="shadow"):
+        machines.alias("gap9-fc", "gap8-fc")
+    spec = machines.get("gap8-fc").scaled(bw=2.0, name="edge-default")
+    with pytest.raises(ValueError, match="taken by an alias"):
+        machines.register(spec)
+    machines.unregister("edge-default")
+
+
+def test_glob_expansion():
+    assert machines.list_machines("gap*") == ["gap8-fc", "gap9-fc"]
+    assert set(machines.list_machines("zoo/*")) >= {
+        "cortex-m7", "gap8-fc", "gap9-fc", "host-cpu", "tpu-v5e",
+        "tpu-v5e-bw-half"}
+    assert machines.expand("tpu-v5e*") == ["tpu-v5e", "tpu-v5e-bw-half"]
+    assert machines.expand("gap8-fc") == ["gap8-fc"]
+    with pytest.raises(KeyError, match="matched nothing"):
+        machines.expand("zzz*")
+    # runtime registrations are excluded from the zoo/ namespace
+    machines.register(machines.get("gap8-fc").scaled(bw=3.0,
+                                                     name="gap8-fc-fast"))
+    assert "gap8-fc-fast" not in machines.list_machines("zoo/*")
+    assert "gap8-fc-fast" in machines.list_machines("gap8*")
+
+
+# ---------------------------------------------------------------------------
+# Schema validation
+# ---------------------------------------------------------------------------
+
+
+def _base_json():
+    return machines.get("gap8-fc").to_json()
+
+
+def test_validation_rejects_undeclared_rate_level():
+    d = _base_json()
+    d["transfer_rates"]["M->L7"] = 1.0e6
+    with pytest.raises(SpecValidationError, match="undeclared level"):
+        MachineSpec.from_json(d)
+
+
+def test_validation_rejects_missing_canonical_role():
+    d = _base_json()
+    # drop L1 entirely: the L1 role no longer resolves
+    d["levels"] = ["M", "L2", "R"]
+    d["capacities"].pop("L1")
+    d["transfer_rates"] = {k: v for k, v in d["transfer_rates"].items()
+                           if "L1" not in k}
+    with pytest.raises(SpecValidationError, match="canonical role"):
+        MachineSpec.from_json(d)
+
+
+def test_validation_rejects_bad_dtype_table():
+    d = _base_json()
+    d["arith_rate"] = {}
+    with pytest.raises(SpecValidationError, match="empty"):
+        MachineSpec.from_json(d)
+    d["arith_rate"] = {"INT8!": 1.0}
+    with pytest.raises(SpecValidationError, match="dtype tag"):
+        MachineSpec.from_json(d)
+
+
+def test_validation_rejects_alias_shadowing_level():
+    d = _base_json()
+    d["level_aliases"] = {"L1": "L2"}
+    with pytest.raises(SpecValidationError, match="shadows"):
+        MachineSpec.from_json(d)
+
+
+def test_validation_rejects_unknown_schema():
+    d = _base_json()
+    d["schema"] = "somebody-else/v9"
+    with pytest.raises(SpecValidationError, match="schema"):
+        MachineSpec.from_json(d)
+
+
+# ---------------------------------------------------------------------------
+# Derived-machine transforms
+# ---------------------------------------------------------------------------
+
+
+def test_scaled_transform_scales_simulated_components():
+    base = machines.get("gap8-fc")
+    fast = base.scaled(arith=2.0, bw=4.0, name="gap8-fc-fast2")
+    assert fast.provenance == {
+        "base": "gap8-fc",
+        "transform": {"scaled": {"arith": 2.0, "bw": 4.0}}}
+    prob = TABLE2[9].problem
+    mk = MicroKernel(4, 8)
+    a = simulate(base, Variant.B3A2C0, mk, prob)
+    b = simulate(fast, Variant.B3A2C0, mk, prob)
+    assert b.arith == a.arith / 2.0
+    assert b.transfer == pytest.approx(a.transfer / 4.0, rel=1e-12)
+
+
+def test_with_capacities_transform():
+    base = machines.get("gap8-fc")
+    big = base.with_capacities(L1=64 * KiB, name="gap8-fc-bigl1")
+    assert big.capacity("L1") == 64 * KiB
+    assert big.capacity("L2") == base.capacity("L2")
+    with pytest.raises(KeyError, match="no such level"):
+        base.with_capacities(VMEM=1)
+    # a bigger L1 can only improve (or tie) the best simulated total
+    prob = TABLE2[9].problem
+    t_base = search_batch(base, [prob])[0].total
+    t_big = search_batch(big, [prob])[0].total
+    assert t_big <= t_base
+
+
+def test_with_dtype_rates_transform():
+    base = machines.get("gap8-fc")
+    multi = base.with_dtype_rates(int4=2 * base.arith_rate["int8"],
+                                  name="gap8-fc-int4")
+    assert multi.arith_rate["int4"] == 2 * base.arith_rate["int8"]
+    assert multi.arith_rate["int8"] == base.arith_rate["int8"]
+    multi.validate()
+
+
+def test_derived_names_auto_suffix_and_are_registrable():
+    d = machines.get("tpu-v5e").scaled(bw=0.5)
+    assert d.name == "tpu-v5e+arith1x+bw0.5x"
+    machines.register(d)
+    assert machines.get(d.name).rate("M", "L1") == \
+        machines.get("tpu-v5e").rate("M", "L1") * 0.5
+
+
+def test_bw_half_zoo_ablation_matches_transform():
+    half = machines.get("tpu-v5e-bw-half")
+    derived = machines.get("tpu-v5e").scaled(bw=0.5)
+    assert dict(half.transfer_rates) == dict(derived.transfer_rates)
+    assert dict(half.arith_rate) == dict(derived.arith_rate)
+
+
+# ---------------------------------------------------------------------------
+# Sweeps over the zoo (acceptance: >= 4 machines end-to-end)
+# ---------------------------------------------------------------------------
+
+
+def test_sweep_accepts_names_specs_and_globs():
+    probs = [row.problem for row in TABLE2[:2]]
+    spec = machines.get("gap8-fc").scaled(arith=2.0, name="gap8-fc-sweepspec")
+    res = gemm.sweep(probs, backends=["analytic-gap8"],
+                     machines=["gap*", "cortex-m7", "host-cpu", spec],
+                     cache=False)
+    names = {r.machine for r in res.rows}
+    assert names == {"gap8-fc", "gap9-fc", "cortex-m7", "host-cpu",
+                     "gap8-fc-sweepspec"}
+    assert len(res.rows) == len(probs) * len(names)
+    assert all(r.seconds > 0 for r in res.rows)
+    # the 2x-arith derived spec must beat its base on the same problem
+    for p in probs:
+        fast = [r for r in res.rows if r.machine == "gap8-fc-sweepspec"
+                and r.problem.m == p.m]
+        base = [r for r in res.rows if r.machine == "gap8-fc"
+                and r.problem.m == p.m]
+        assert fast[0].seconds < base[0].seconds
+
+
+def test_sweep_zoo_glob_tpu_backend():
+    res = gemm.sweep([(512, 2048, 1024)], backends=["analytic-tpu"],
+                     machines=["tpu-v5e*"], cache=False)
+    by = {r.machine: r for r in res.rows}
+    assert set(by) == {"tpu-v5e", "tpu-v5e-bw-half"}
+    assert by["tpu-v5e-bw-half"].seconds > by["tpu-v5e"].seconds
+
+
+def test_two_level_machine_runs_gap8_model():
+    """cortex-m7 has no L2: the role aliases onto L1 and the whole variant
+    family still simulates (level-name indirection)."""
+    m7 = machines.get("cortex-m7")
+    assert m7.level("L2") == "L1"
+    cb = search_batch(m7, [TABLE2[3].problem])[0]
+    assert cb.total > 0
+    assert m7.rate("L2", "R") == m7.rate("L1", "R")
+
+
+# ---------------------------------------------------------------------------
+# Calibrator: vectorized fit == scalar oracle, rate recovery, provenance
+# ---------------------------------------------------------------------------
+
+_FIT_MKS = [MicroKernel(4, 24), MicroKernel(8, 12), MicroKernel(12, 8),
+            MicroKernel(16, 4)]
+
+
+def _fit_samples(n=24, seed=0):
+    rng = np.random.default_rng(seed)
+    probs = [(int(m), int(nn), int(k)) for m, nn, k in
+             zip(rng.integers(16, 4096, n), rng.integers(16, 4096, n),
+                 rng.integers(16, 8192, n))]
+    mks = [_FIT_MKS[i % len(_FIT_MKS)] for i in range(n)]
+    return probs, mks
+
+
+def test_calibrator_design_matrix_batch_equals_scalar():
+    probs, mks = _fit_samples()
+    cal = machines.Calibrator("gap8-fc")
+    A_batch, cols_batch = cal.design_matrix(probs, mks)
+    A_scalar, cols_scalar = cal.design_matrix_scalar(probs, mks)
+    assert cols_batch == cols_scalar
+    assert np.array_equal(A_batch, A_scalar)      # bitwise, not approx
+    cal2 = machines.Calibrator("tpu-v5e")
+    B_batch, c1 = cal2.design_matrix(probs)
+    B_scalar, c2 = cal2.design_matrix_scalar(probs)
+    assert c1 == c2 and np.array_equal(B_batch, B_scalar)
+
+
+def test_calibrator_fit_recovers_known_rates():
+    gap8 = machines.get("gap8-fc")
+    cal = machines.Calibrator("gap8-fc")
+    probs, mks = _fit_samples()
+    times = [simulate(gap8, Variant.B3A2C0, mk,
+                      cal._coerce_problems([p])[0].as_problem()).total
+             for p, mk in zip(probs, mks)]
+    spec, report = cal.fit(probs, times, micro_kernels=mks,
+                           date="2026-07-27", name="gap8-refit")
+    for key, rate in spec.transfer_rates.items():
+        assert rate == pytest.approx(gap8.transfer_rates[key], rel=1e-6)
+    assert spec.arith_rate["int8"] == pytest.approx(
+        gap8.arith_rate["int8"], rel=1e-6)
+    assert report.residual_rms_s < 1e-6
+    assert report.samples == len(probs)
+    fit = spec.provenance["fit"]
+    assert fit["date"] == "2026-07-27"
+    assert fit["samples"] == len(probs)
+    assert fit["cost_model"]["variant"] == "B3A2C0"
+    assert spec.provenance["base"] == "gap8-fc"
+
+
+def test_calibrator_single_microkernel_fit_is_underdetermined():
+    """With one micro-kernel every streaming column is proportional to
+    m*n*k — the recovered rates are NOT trustworthy.  The design matrix is
+    rank-deficient and fit() must refuse to emit (let alone register) a
+    spec from it."""
+    cal = machines.Calibrator("gap8-fc", micro_kernel=MicroKernel(4, 8))
+    probs, _ = _fit_samples()
+    A, cols = cal.design_matrix(probs)
+    assert np.linalg.matrix_rank(A) < len(cols)
+    with pytest.raises(ValueError, match="rank-deficient"):
+        cal.fit(probs, [1.0] * len(probs), date=None)
+
+
+def test_calibrator_fit_registers_and_persists(tmp_path):
+    gap8 = machines.get("gap8-fc")
+    cal = machines.Calibrator("gap8-fc")
+    probs, mks = _fit_samples(n=16, seed=3)
+    times = [simulate(gap8, Variant.B3A2C0, mk,
+                      cal._coerce_problems([p])[0].as_problem()).total
+             for p, mk in zip(probs, mks)]
+    spec, _ = cal.fit(probs, times, micro_kernels=mks, date=None,
+                      name="gap8-fit-persisted", register=True,
+                      manifest_dir=str(tmp_path))
+    assert machines.get("gap8-fit-persisted") is spec
+    assert machines.source_of("gap8-fit-persisted") == "calibrated"
+    path = tmp_path / "gap8-fit-persisted.json"
+    assert MachineSpec.from_manifest(str(path)) == spec
+    # the calibrated machine immediately feeds the planner
+    plan = gemm.plan(TABLE2[0].problem, backend="analytic-gap8",
+                     machine="gap8-fit-persisted", cache=False)
+    assert plan.machine == "gap8-fit-persisted"
+
+
+def test_calibrator_rejects_underdetermined_sample_count():
+    cal = machines.Calibrator("gap8-fc")
+    with pytest.raises(ValueError, match="under-determined"):
+        cal.fit([(64, 64, 64)], [1.0], date=None)
+
+
+def test_calibrate_host_wraps_pipeline(monkeypatch):
+    """calibrate_host delegates to Calibrator.measure_host and the result
+    can feed the registry; micro-experiments are monkeypatched to stay
+    fast and deterministic."""
+    from repro.core import calibrate as cal_mod
+    monkeypatch.setattr(cal_mod, "measure_packing_rate", lambda c: 2.0e9)
+    monkeypatch.setattr(cal_mod, "measure_copy_rate", lambda: 8.0e9)
+    monkeypatch.setattr(cal_mod, "measure_arith_rate", lambda: 5.0e10)
+    spec = cal_mod.calibrate_host("host-test", date="2026-07-27",
+                                  register=True)
+    assert spec.rate("M", "M") == 2.0e9
+    assert spec.rate("M", "L1") == 8.0e9
+    assert spec.arith_rate["f32"] == 5.0e10
+    assert spec.provenance["calibration"]["date"] == "2026-07-27"
+    assert machines.get("host-test") is spec
+    assert search_batch(spec, [TABLE2[0].problem])[0].total > 0
+
+
+# ---------------------------------------------------------------------------
+# Legacy shims + CLI
+# ---------------------------------------------------------------------------
+
+
+def test_legacy_hardware_shims_warn_but_work():
+    from repro.core import hardware
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        gap8 = hardware.GAP8_FC
+        tpu = hardware.get_machine("tpu-v5e")
+        zoo = hardware.MACHINES
+    assert len(w) == 3
+    assert all(issubclass(x.category, DeprecationWarning) for x in w)
+    assert gap8 is machines.get("gap8-fc")
+    assert tpu is machines.get("tpu-v5e")
+    assert "gap8-fc" in zoo and "tpu-v5e" in zoo
+    with pytest.raises(KeyError):
+        hardware.get_machine("nope")
+    # repro.core re-exports stay silent (they resolve via the registry);
+    # equality not identity — the registry may have been reloaded since
+    # repro.core bound the name at import time.
+    from repro.core import GAP8_FC
+    assert GAP8_FC == machines.get("gap8-fc")
+
+
+def test_cli_validate_and_show(capsys, tmp_path):
+    from repro.machines.__main__ import main
+    assert main(["validate"]) == 0
+    out = capsys.readouterr().out
+    assert "manifests valid" in out and "FAIL" not in out
+    assert main(["show", "gap8-fc"]) == 0
+    shown = json.loads(capsys.readouterr().out)
+    assert shown["name"] == "gap8-fc"
+    # a broken manifest dir fails
+    bad = dict(shown)
+    bad["arith_rate"] = {}
+    (tmp_path / "bad.json").write_text(json.dumps(bad))
+    assert main(["validate", "--dir", str(tmp_path)]) == 1
+
+
+def test_plan_cache_distinguishes_machines():
+    gemm.clear_plan_cache()
+    p1 = gemm.plan((64, 96, 128), backend="analytic-gap8",
+                   machine="gap8-fc")
+    p2 = gemm.plan((64, 96, 128), backend="analytic-gap8",
+                   machine="gap9-fc")
+    assert p1 is not p2
+    assert p1.machine == "gap8-fc" and p2.machine == "gap9-fc"
+    gemm.clear_plan_cache()
+
+
+def test_plan_cache_keys_on_machine_content_not_name():
+    """Two same-named specs with different rate tables must not share
+    cached plans (derived transforms / re-registered calibrations)."""
+    gemm.clear_plan_cache()
+    base = machines.get("gap8-fc")
+    a = base.with_capacities(L1=8 * KiB)
+    b = base.with_capacities(L1=64 * KiB)
+    assert a.name == b.name and a.fingerprint() != b.fingerprint()
+    prob = TABLE2[9].problem
+    pa = gemm.plan(prob, backend="analytic-gap8", machine=a)
+    pb = gemm.plan(prob, backend="analytic-gap8", machine=b)
+    assert pa is not pb
+    assert pa.predicted_seconds != pb.predicted_seconds
+    assert pb.predicted_seconds == search_batch(b, [prob])[0].total
+    gemm.clear_plan_cache()
+
+
+def test_tune_cache_keys_on_machine_content_not_name():
+    from repro.core.autotune import tune_batch
+    from repro.core.tpu_model import GemmShape
+    base = machines.get("tpu-v5e")
+    half = dataclasses.replace(base.scaled(bw=0.5), name=base.name)
+    shape = GemmShape(512, 2048, 1024, "bf16")
+    a = tune_batch([shape], machine=base)[0]
+    b = tune_batch([shape], machine=half)[0]
+    assert b.seconds > a.seconds        # not the memoised full-bw decision
+
+
+def test_load_zoo_custom_dir_does_not_shadow_builtin_zoo(tmp_path):
+    from repro.machines import registry as reg
+    spec = machines.get("gap8-fc").scaled(bw=2.0, name="custom-zoo-machine")
+    spec.to_manifest(str(tmp_path / "custom.json"))
+    # emulate a fresh process whose FIRST registry touch is the custom dir:
+    # the built-in zoo must still load underneath it.
+    reg._REGISTRY.clear()
+    reg._SOURCES.clear()
+    reg._ALIASES.clear()
+    reg._zoo_loaded = False
+    names = machines.load_zoo(str(tmp_path))
+    assert names == ["custom-zoo-machine"]
+    assert machines.get("tpu-v5e") is not None
+    assert "gap8-fc" in machines.list_machines("zoo/*")
+    machines.unregister("custom-zoo-machine")
+
+
+# ---------------------------------------------------------------------------
+# Sweep-driven serving autoconfig
+# ---------------------------------------------------------------------------
+
+
+def test_serving_autoconfigure_picks_best_grid_point():
+    import jax
+    from repro.configs import get_config
+    from repro.models.common import HOST_MESH, split_params
+    from repro.models.model import LM
+    from repro.serving.engine import Request, ServingEngine
+
+    cfg = get_config("qwen2-1.5b", smoke=True)
+    lm = LM(cfg, HOST_MESH)
+    values, _ = split_params(lm.init(jax.random.key(0)))
+    eng = ServingEngine.autoconfigure(lm, values, dtypes=("bf16", "int8"),
+                                      batches=(1, 4), max_len=64)
+    ac = eng.autoconfig
+    assert eng.max_batch == ac["max_batch"] and ac["max_batch"] in (1, 4)
+    # the operating point is chosen among the model's *native* dtype rows
+    # (the engine really decodes in bf16); what-if dtypes only inform the
+    # recorded grid.
+    assert ac["native_dtype"] == "bf16" and ac["dtype"] == "bf16"
+    native_best = max((g for g in ac["grid"] if g["dtype"] == "bf16"),
+                      key=lambda g: g["predicted_tokens_per_second"])
+    assert ac["predicted_tokens_per_second"] == \
+        native_best["predicted_tokens_per_second"]
+    assert len(ac["grid"]) == 4          # 2 batches x 2 dtypes
+    # frozen plans match the chosen operating point
+    assert all(p.problem.dtype == ac["dtype"] for p in eng.gemm_plans)
+    assert all(p.problem.m == ac["max_batch"] for p in eng.gemm_plans[:2])
+    assert "autoconfig" in eng.perf_report()
+    # the autoconfigured engine still serves
+    eng.submit(Request(rid=0, prompt=[3, 1, 4], max_new_tokens=3))
+    done = eng.run_until_drained()
+    assert len(done) == 1 and len(done[0].generated) == 3
