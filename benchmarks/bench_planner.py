@@ -142,10 +142,40 @@ def bench_cold_tune() -> dict:
     return {"scalar_s": s_t, "batched_s": b_t, "speedup": s_t / b_t}
 
 
+def bench_measure_fidelity() -> dict:
+    """Host measure→fit→validate smoke loop (repro.measure): the fitted
+    host MAPE joins the per-SHA trajectory, so model-accuracy regressions
+    show up next to planner-perf regressions."""
+    import tempfile
+
+    from repro import measure
+
+    with tempfile.TemporaryDirectory() as td:
+        store = measure.SampleStore(os.path.join(td, "smoke.jsonl"))
+        t0 = time.perf_counter()
+        camp = measure.run_campaign("smoke", machine="host-cpu",
+                                    harness="host-numpy", store=store)
+        campaign_s = time.perf_counter() - t0
+        spec, fit = measure.fit_from_store(store, "host-cpu",
+                                           name="host-cpu-bench", date=None,
+                                           on_nonpositive="free")
+        val = measure.validate_spec(spec, store)
+        return {
+            "samples": len(camp.samples),
+            "campaign_s": campaign_s,
+            "fit_residual_rms_s": fit.residual_rms_s,
+            "dropped_columns": list(fit.dropped),
+            "mape_pct": val.mape,
+            "median_ape_pct": val.median_ape,
+            "worst_ape_pct": 100.0 * val.worst.ape,
+        }
+
+
 def main() -> None:
     table2 = bench_table2_gap8()
     allarch = bench_allarch_tpu()
     cold = bench_cold_tune()
+    fidelity = bench_measure_fidelity()
     combined_scalar = table2["scalar_s"] + allarch["scalar_s"]
     combined_batched = table2["batched_s"] + allarch["batched_s"]
     report = {
@@ -154,6 +184,7 @@ def main() -> None:
             "allarch_tpu": allarch,
             "cold_tune": cold,
         },
+        "measure_fidelity": fidelity,
         "combined": {
             "scalar_s": combined_scalar,
             "batched_s": combined_batched,
@@ -172,7 +203,8 @@ def main() -> None:
     os.replace(tmp, OUT_PATH)
     print(json.dumps(report, indent=1, sort_keys=True))
     print(f"\ncombined Table-2 + all-arch speedup: "
-          f"{report['combined']['speedup']:.1f}x "
+          f"{report['combined']['speedup']:.1f}x; smoke-campaign host MAPE "
+          f"{fidelity['mape_pct']:.1f}% "
           f"(record {sha[:12]} appended to {os.path.abspath(OUT_PATH)}; "
           f"{len(trajectory['records'])} records in trajectory)")
 

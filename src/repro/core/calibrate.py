@@ -16,20 +16,22 @@ harness would time HBM<->VMEM DMAs via Pallas kernels.
 """
 from __future__ import annotations
 
-import time
-
 import numpy as np
 
 from repro.machines.spec import MachineSpec
 
 
 def _time(fn, *args, reps: int = 5) -> float:
-    best = float("inf")
-    for _ in range(reps):
-        t0 = time.perf_counter()
-        fn(*args)
-        best = min(best, time.perf_counter() - t0)
-    return best
+    """Timing via the shared ``repro.measure.harness`` protocol.
+
+    The old inline loop took a bare best-of-5 with no warmup, which billed
+    first-touch page faults of the freshly allocated buffers to the packing
+    rates; the harness warms up once and aggregates median-of-min with the
+    clock overhead subtracted.
+    """
+    from repro.measure.harness import time_callable
+
+    return time_callable(lambda: fn(*args), warmup=1, rounds=reps).seconds
 
 
 def measure_copy_rate(nbytes: int = 1 << 24) -> float:

@@ -110,7 +110,9 @@ def simulate(
         traffic[t.name] = t.bytes
         origins[t.name] = t.origin
 
-    arith_rate = machine.arith_rate[prob.dtype]
+    # per-micro-kernel refinement (paper §4) when the spec carries a table;
+    # otherwise exactly arith_rate[dtype].
+    arith_rate = machine.arith_rate_for(prob.dtype, mk)
     components["arith"] = prob.flops / arith_rate
 
     return CostBreakdown(
@@ -213,8 +215,18 @@ def simulate_batch(
             rate = base * (t.chunk / float(machine.reference_chunk))
         comp = t.bytes / rate
         total = comp if total is None else total + comp
-    arith_rate = np.array([machine.arith_rate[p.dtype] for p in probs],
-                          np.float64)[:, None]
+    dtypes = [p.dtype for p in probs]
+    if machine.arith_per_mk and any(dt in machine.arith_per_mk
+                                    for dt in dtypes):
+        # per-candidate rates: (P, C) lattice of the paper-§4 refinement,
+        # one lookup per (dtype, micro-kernel) pair, broadcast over problems.
+        rows_by_dt = {dt: np.array([machine.arith_rate_for(dt, mk)
+                                    for mk in cands], np.float64)
+                      for dt in set(dtypes)}
+        arith_rate = np.stack([rows_by_dt[dt] for dt in dtypes], axis=0)
+    else:
+        arith_rate = np.array([machine.arith_rate[dt] for dt in dtypes],
+                              np.float64)[:, None]
     arith = 2.0 * (m * n * k).astype(np.float64) / arith_rate
     total = np.broadcast_to(total + arith, (len(probs), len(cands)))
     return CostBatch(variant=variant, micro_kernels=cands, total=total,

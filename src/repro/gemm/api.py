@@ -156,6 +156,20 @@ class GemmPlan:
                                                  interpret=interpret,
                                                  force=force)
 
+    def blocking_dims(self) -> tuple[int, int, int]:
+        """The plan's cache blocking as ``(bm, bn, bk)`` loop-nest trip
+        sizes — the uniform view the measurement harness replays as a
+        blocked loop nest (``repro.measure.harness``).  GAP8-simulator
+        plans map ``(m_c, n_c, k_c)``; tile plans map the TileConfig;
+        selection-free plans are a single whole-problem block."""
+        sel = self.selection
+        if isinstance(sel, VariantChoice):
+            b = sel.blocking
+            return (int(b.m_c), int(b.n_c), int(b.k_c))
+        if sel is not None and hasattr(sel, "bm"):
+            return (int(sel.bm), int(sel.bn), int(sel.bk))
+        return (self.problem.m, self.problem.n, self.problem.k)
+
     def describe(self) -> str:
         p, sel = self.problem, self.selection
         cost = (f"{self.predicted_seconds * 1e6:.1f}us"

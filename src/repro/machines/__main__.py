@@ -66,6 +66,30 @@ def cmd_calibrate(args) -> int:
         args.name, date=args.date, register=True, manifest_dir=args.out)
     print(f"calibrated {spec.name}: "
           f"{json.dumps(spec.provenance['calibration']['measured'])}")
+    if args.grid or args.store:
+        # the full §3.2-and-beyond loop: measure a GEMM campaign against the
+        # seed spec's geometry and fit every rate at once (repro.measure).
+        import tempfile
+
+        from repro import measure
+
+        store = measure.SampleStore(
+            args.store or os.path.join(tempfile.mkdtemp(prefix="calib-"),
+                                       "samples.jsonl"))
+        if args.grid:
+            camp = measure.run_campaign(args.grid, machine=spec,
+                                        harness="host-numpy",
+                                        dtype=args.dtype, store=store)
+            print(f"measured {len(camp.samples)} samples "
+                  f"({args.grid}, host-numpy) -> {store.path}")
+        spec, fit = measure.fit_from_store(
+            store, spec, name=args.name, date=args.date, register=True,
+            manifest_dir=args.out, on_nonpositive="free")
+        report = measure.validate_spec(spec, store)
+        print(f"fitted {spec.name} from {fit.samples} samples "
+              f"(residual RMS {fit.residual_rms_s:.3e}s"
+              + (f", free columns {fit.dropped}" if fit.dropped else "")
+              + f"); validation MAPE {report.mape:.1f}%")
     if args.out:
         print(f"manifest written to "
               f"{os.path.join(args.out, spec.name + '.json')}")
@@ -86,12 +110,22 @@ def main(argv=None) -> int:
     sh.set_defaults(fn=cmd_show)
     ca = sub.add_parser("calibrate",
                         help="run the paper's 3.2 micro-experiments on this "
-                             "host and register the spec")
+                             "host and register the spec; with --grid/"
+                             "--store, follow with a measured-GEMM campaign "
+                             "and a full rate fit (repro.measure)")
     ca.add_argument("--name", default="host-cpu")
     ca.add_argument("--date", default=None,
                     help="calibration date recorded in provenance")
     ca.add_argument("--out", default=None,
                     help="directory to persist the manifest into")
+    ca.add_argument("--grid", default=None,
+                    help="measurement-campaign grid (smoke|table2|mobilenet)"
+                         " to run with the host-numpy harness before fitting")
+    ca.add_argument("--store", default=None,
+                    help="sample store to measure into / fit from "
+                         "(temp file when omitted with --grid)")
+    ca.add_argument("--dtype", default="f32",
+                    help="campaign dtype (default f32: host BLAS)")
     ca.set_defaults(fn=cmd_calibrate)
     args = ap.parse_args(argv)
     return args.fn(args)

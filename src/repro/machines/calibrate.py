@@ -34,25 +34,37 @@ from repro.machines.spec import MachineSpec
 _RATE = "rate:"
 _ARITH = "arith:"
 
+#: rate assigned to design columns the fit marks as effectively free
+#: (on_nonpositive="free"): large enough that the term contributes ~nothing,
+#: finite so the spec still validates.
+FREE_RATE = 1.0e18
+
 
 @dataclasses.dataclass(frozen=True)
 class FitReport:
     """Provenance of one vectorized rate fit."""
 
     columns: list[str]          # "rate:M->L2" / "arith:int8" design columns
-    inverse_rates: np.ndarray   # the lstsq solution x (seconds per byte/op)
+    inverse_rates: np.ndarray   # the lstsq solution x (seconds per byte/op;
+                                # NaN for dropped columns)
     residual_rms_s: float       # RMS of (A@x - t) over the samples
     samples: int
     date: str | None
+    # columns the measurements could not support (solved non-positive) and
+    # that fit(on_nonpositive="drop") eliminated; their template rates stand.
+    dropped: list[str] = dataclasses.field(default_factory=list)
 
     def as_provenance(self) -> dict[str, Any]:
-        return {
+        d = {
             "method": "vectorized-lstsq",
             "columns": list(self.columns),
             "residual_rms_s": float(self.residual_rms_s),
             "samples": int(self.samples),
             "date": self.date,
         }
+        if self.dropped:
+            d["dropped_columns"] = list(self.dropped)
+        return d
 
 
 class Calibrator:
@@ -112,8 +124,9 @@ class Calibrator:
                              f"micro-kernels")
         return mks
 
-    def design_matrix(self, problems,
-                      micro_kernels=None) -> tuple[np.ndarray, list[str]]:
+    def design_matrix(self, problems, micro_kernels=None, *,
+                      per_mk_arith: bool = False
+                      ) -> tuple[np.ndarray, list[str]]:
         """(samples x columns) coefficients of the inverse rates, built with
         the batched engines — one vectorized evaluation for all samples.
 
@@ -123,16 +136,29 @@ class Calibrator:
         arithmetic term are exactly proportional to ``m*n*k``, which makes
         the system rank-deficient (the paper's calibration likewise varies
         the micro-kernel across its experiments).
+
+        ``per_mk_arith`` splits the arithmetic column per (dtype,
+        micro-kernel) — the paper-§4 refinement — so the fit lands an
+        ``arith_per_mk`` table instead of one rate per dtype.  Caveat:
+        under the *analytic* policy with a single dtype the register
+        streaming terms are exactly proportional to ``m*n*k`` within each
+        micro-kernel group, i.e. collinear with the per-mk arithmetic
+        columns, and :meth:`fit` will correctly refuse the rank-deficient
+        system — calibrate per-mk rates from ``padded``-policy samples
+        (the ceil trip counts break the proportionality, mirroring a real
+        edge-tiled implementation) or measure them directly like the paper.
         """
         probs = self._coerce_problems(problems)
         if self.model == "blis":
             return self._design_blis_batch(
-                probs, self._coerce_mks(probs, micro_kernels))
+                probs, self._coerce_mks(probs, micro_kernels), per_mk_arith)
         if micro_kernels is not None:
             raise ValueError("micro_kernels only applies to the blis model")
+        if per_mk_arith:
+            raise ValueError("per_mk_arith only applies to the blis model")
         return self._design_pallas_batch(probs)
 
-    def _design_blis_batch(self, probs, mks):
+    def _design_blis_batch(self, probs, mks, per_mk_arith: bool = False):
         from repro.core.variants import (
             derive_blocking_batch,
             traffic_terms_batch,
@@ -163,10 +189,19 @@ class Calibrator:
                                         (len(probs),))
                 coeff = coeff * (mach.reference_chunk / chunk)
             cols_map[key] = cols_map.get(key, 0.0) + coeff
-        for dt in sorted({p.dtype for p in probs}):
-            sel = np.array([p.dtype == dt for p in probs], np.float64)
-            cols_map[f"{_ARITH}{dt}"] = sel * np.array(
-                [p.flops for p in probs], np.float64)
+        flops = np.array([p.flops for p in probs], np.float64)
+        if per_mk_arith:
+            # one column per (dtype, micro-kernel), in first-seen sample
+            # order (mirrors the scalar oracle's insertion order).
+            for dt, mk_s in dict.fromkeys(
+                    (p.dtype, str(mk)) for p, mk in zip(probs, mks)):
+                sel = np.array([p.dtype == dt and str(mk) == mk_s
+                                for p, mk in zip(probs, mks)], np.float64)
+                cols_map[f"{_ARITH}{dt}@{mk_s}"] = sel * flops
+        else:
+            for dt in sorted({p.dtype for p in probs}):
+                sel = np.array([p.dtype == dt for p in probs], np.float64)
+                cols_map[f"{_ARITH}{dt}"] = sel * flops
         names = list(cols_map)
         return np.stack([cols_map[c] for c in names], axis=1), names
 
@@ -214,7 +249,8 @@ class Calibrator:
         return np.stack([cols_map[c] for c in names], axis=1), names
 
     def design_matrix_scalar(self, problems,
-                             micro_kernels=None
+                             micro_kernels=None, *,
+                             per_mk_arith: bool = False
                              ) -> tuple[np.ndarray, list[str]]:
         """The per-sample scalar-loop design matrix, kept as the reference
         oracle the vectorized :meth:`design_matrix` must agree with
@@ -238,7 +274,9 @@ class Calibrator:
                     if t.chunk is not None:
                         coeff = coeff * (mach.reference_chunk / t.chunk)
                     row[key] = row.get(key, 0.0) + coeff
-                row[f"{_ARITH}{p.dtype}"] = pr.flops
+                arith_key = f"{_ARITH}{p.dtype}@{mk}" if per_mk_arith \
+                    else f"{_ARITH}{p.dtype}"
+                row[arith_key] = pr.flops
                 rows_acc.append(row)
         else:
             from repro.core.autotune import tune_batch
@@ -265,11 +303,22 @@ class Calibrator:
                 A[i, j] = row.get(key, 0.0)
         return A, names
 
+    def _template_rate(self, col: str) -> float:
+        """The template's rate for one design column (what a dropped column
+        keeps charging under ``on_nonpositive="drop"``)."""
+        if col.startswith(_RATE):
+            o, _, d = col[len(_RATE):].partition("->")
+            return self.template.transfer_rates[(o, d)]
+        dt, sep, mk_s = col[len(_ARITH):].partition("@")
+        return self.template.arith_rate_for(dt, mk_s if sep else None)
+
     # -- the fit --------------------------------------------------------------
 
     def fit(self, problems, seconds: Sequence[float], *, date: str | None,
             micro_kernels=None, name: str | None = None,
             register: bool = False, manifest_dir: str | None = None,
+            per_mk_arith: bool = False, on_nonpositive: str = "raise",
+            weighting: str = "absolute",
             extra_provenance: Mapping[str, Any] | None = None,
             ) -> tuple[MachineSpec, FitReport]:
         """One vectorized least-squares solve over all samples.
@@ -277,13 +326,35 @@ class Calibrator:
         ``date`` is required (pass None explicitly to record an undated
         fit) — the Calibrator never invents timestamps.  For the BLIS
         model pass per-sample ``micro_kernels`` spanning several shapes
-        (see :meth:`design_matrix`).  Returns the fitted spec and the
-        :class:`FitReport`; with ``register=True`` the spec lands in the
-        registry (source ``"calibrated"``), with ``manifest_dir`` it is
-        persisted as ``<dir>/<name>.json``.
+        (see :meth:`design_matrix`); ``per_mk_arith=True`` fits the §4
+        per-micro-kernel arithmetic table.  A column solving non-positive
+        means the measurements assign that term of the cost model no (or
+        negative) cost: ``on_nonpositive="raise"`` refuses to emit a
+        garbage spec; ``"drop"`` eliminates the offending columns
+        iteratively and keeps the template's rates for them (the term is
+        real but these samples cannot see it); ``"free"`` likewise
+        eliminates them but sets their rates to :data:`FREE_RATE` so the
+        term costs ~nothing (the right attribution for real measurements on
+        machines that overlap that traffic with compute).  Either way the
+        drop is recorded in provenance.  ``weighting="relative"`` solves
+        in units of relative error (each sample row divided by its measured
+        time) so a microsecond cell counts as much as a second cell — the
+        right loss when the goal is MAPE over a wide-dynamic-range workload;
+        ``"absolute"`` (the default) is the plain solve, exact on synthetic
+        samples.  Returns the fitted spec and the :class:`FitReport`; with
+        ``register=True`` the spec lands in the registry (source
+        ``"calibrated"``), with ``manifest_dir`` it is persisted as
+        ``<dir>/<name>.json``.
         """
+        if on_nonpositive not in ("raise", "drop", "free"):
+            raise ValueError(f"on_nonpositive must be 'raise', 'drop' or "
+                             f"'free', got {on_nonpositive!r}")
+        if weighting not in ("absolute", "relative"):
+            raise ValueError(f"weighting must be 'absolute' or 'relative', "
+                             f"got {weighting!r}")
         t = np.asarray(list(seconds), np.float64)
-        A, columns = self.design_matrix(problems, micro_kernels)
+        A, columns = self.design_matrix(problems, micro_kernels,
+                                        per_mk_arith=per_mk_arith)
         if A.shape[0] != t.shape[0]:
             raise ValueError(f"{A.shape[0]} problems vs {t.shape[0]} "
                              f"measured times")
@@ -291,33 +362,106 @@ class Calibrator:
             raise ValueError(
                 f"under-determined fit: {A.shape[0]} samples for "
                 f"{A.shape[1]} rate columns {columns}")
-        x, _, rank, _ = np.linalg.lstsq(A, t, rcond=None)
-        if rank < len(columns):
-            raise ValueError(
-                f"rank-deficient fit (rank {rank} < {len(columns)} columns "
-                f"{columns}): the samples cannot separate the rates — vary "
-                f"the micro-kernels and problem shapes (see design_matrix)")
-        if np.any(x <= 0.0):
-            bad = [c for c, xi in zip(columns, x) if xi <= 0.0]
-            raise ValueError(
-                f"fit produced non-positive inverse rates for {bad}; the "
-                f"measured times are inconsistent with the cost model — "
-                f"not registering a garbage spec")
-        residual = float(np.sqrt(np.mean((A @ x - t) ** 2)))
-        report = FitReport(columns=columns, inverse_rates=x,
+        if weighting == "relative" and np.any(t <= 0.0):
+            raise ValueError("relative weighting needs strictly "
+                             "positive measured times")
+        Aw = A / t[:, None] if weighting == "relative" else A
+        keep = list(range(len(columns)))
+        dropped: list[int] = []
+
+        def solve_target() -> np.ndarray:
+            # under "drop" the emitted spec keeps charging the template rate
+            # for dropped terms, so the kept columns must be solved against
+            # the measured times *minus* that charge — otherwise the
+            # re-solve absorbs the dropped term's time into the kept rates
+            # and the spec double-counts it.  "free" terms charge ~nothing.
+            adj = t
+            if dropped and on_nonpositive == "drop":
+                inv = np.array([1.0 / self._template_rate(columns[i])
+                                for i in dropped])
+                adj = t - A[:, dropped] @ inv
+            return adj / t if weighting == "relative" else adj
+
+        while True:
+            x, _, rank, _ = np.linalg.lstsq(Aw[:, keep], solve_target(),
+                                            rcond=None)
+            if rank < len(keep):
+                kept_cols = [columns[i] for i in keep]
+                raise ValueError(
+                    f"rank-deficient fit (rank {rank} < {len(keep)} columns "
+                    f"{kept_cols}): the samples cannot separate the rates — "
+                    f"vary the micro-kernels and problem shapes "
+                    f"(see design_matrix)")
+            bad = [i for i, xi in zip(keep, x) if xi <= 0.0]
+            if not bad:
+                break
+            if on_nonpositive == "raise":
+                raise ValueError(
+                    f"fit produced non-positive inverse rates for "
+                    f"{[columns[i] for i in bad]}; the measured times are "
+                    f"inconsistent with the cost model — not registering a "
+                    f"garbage spec (pass on_nonpositive='drop' to keep the "
+                    f"template's rates for those columns)")
+            # NNLS-style: eliminate only the most-negative column per
+            # iteration — a near-collinear partner may solve positive once
+            # the worst offender is gone.
+            worst = min(zip(keep, x), key=lambda kx: kx[1])[0]
+            dropped.append(worst)
+            keep.remove(worst)
+            if not keep:
+                raise ValueError(
+                    "every design column solved non-positive — the measured "
+                    "times are inconsistent with the cost model")
+        # the residual is always reported in absolute seconds for the spec
+        # actually emitted: dropped columns still contribute at the rate the
+        # spec keeps for them (template rate under "drop", ~0 under "free").
+        pred = A[:, keep] @ x
+        if dropped:
+            fallback = 1.0 / FREE_RATE if on_nonpositive == "free" else None
+            inv = np.array([fallback if fallback is not None
+                            else 1.0 / self._template_rate(columns[i])
+                            for i in dropped])
+            pred = pred + A[:, dropped] @ inv
+        residual = float(np.sqrt(np.mean((pred - t) ** 2)))
+        x_full = np.full(len(columns), np.nan)
+        x_full[keep] = x
+        report = FitReport(columns=columns, inverse_rates=x_full,
                            residual_rms_s=residual, samples=len(t),
-                           date=date)
+                           date=date,
+                           dropped=[columns[i] for i in sorted(dropped)])
 
         rates = dict(self.template.transfer_rates)
         arith = dict(self.template.arith_rate)
-        for col, xi in zip(columns, x):
+        arith_mk = {dt: dict(tab)
+                    for dt, tab in self.template.arith_per_mk.items()}
+
+        def assign(col: str, rate: float) -> None:
             if col.startswith(_RATE):
                 o, _, d = col[len(_RATE):].partition("->")
-                rates[(o, d)] = 1.0 / xi
+                rates[(o, d)] = rate
             else:
-                arith[col[len(_ARITH):]] = 1.0 / xi
+                dt, sep, mk_s = col[len(_ARITH):].partition("@")
+                if sep:
+                    arith_mk.setdefault(dt, {})[mk_s] = rate
+                else:
+                    arith[dt] = rate
+                    # a refitted shared rate supersedes any per-mk table the
+                    # template carried for this dtype — keeping it would make
+                    # arith_rate_for shadow the fresh fit with stale rates.
+                    arith_mk.pop(dt, None)
+
+        for i, xi in zip(keep, x):
+            assign(columns[i], 1.0 / xi)
+        if on_nonpositive == "free":
+            for col in report.dropped:
+                assign(col, FREE_RATE)
         prov: dict[str, Any] = {"base": self.template.name,
                                 "fit": report.as_provenance()}
+        prov["fit"]["template_geometry"] = \
+            self.template.geometry_fingerprint()
+        prov["fit"]["weighting"] = weighting
+        if report.dropped:
+            prov["fit"]["nonpositive_policy"] = on_nonpositive
         if self.model == "blis":
             coerced = self._coerce_mks([None] * len(t), micro_kernels)
             mks = sorted({str(mk) for mk in coerced})
@@ -330,7 +474,8 @@ class Calibrator:
             prov.update(extra_provenance)
         spec = dataclasses.replace(
             self.template, name=name or self.template.name,
-            transfer_rates=rates, arith_rate=arith, provenance=prov)
+            transfer_rates=rates, arith_rate=arith, arith_per_mk=arith_mk,
+            provenance=prov)
         spec.validate()
         if register:
             _registry.register(spec, overwrite=True, source="calibrated")
@@ -364,6 +509,9 @@ class Calibrator:
         spec = dataclasses.replace(
             template,
             name=name,
+            # fresh measured rates supersede any per-mk table the template
+            # carried — keeping it would shadow the new arith_rate.
+            arith_per_mk={},
             transfer_rates={
                 ("M", "M"): pack4,
                 ("M", "L2"): pack4,

@@ -39,6 +39,7 @@ SCHEMA = "repro.machines/v1"
 CANONICAL_ROLES = ("M", "L2", "L1", "R")
 
 _DTYPE_TAG = re.compile(r"^[a-z][a-z0-9_]*$")
+_MK_TAG = re.compile(r"^[1-9][0-9]*x[1-9][0-9]*$")
 _RATE_SEP = "->"
 
 
@@ -68,6 +69,11 @@ class MachineSpec:
     transfer_rates: Mapping[tuple[str, str], float]
     # arithmetic throughput, ops/s (1 MAC = 2 ops), by dtype tag.
     arith_rate: Mapping[str, float]
+    # optional per-micro-kernel refinement of ``arith_rate`` (paper §4's
+    # stated extension of the basic simulator): dtype tag -> {"4x24": ops/s}.
+    # Micro-kernels absent from the table fall back to ``arith_rate``.
+    arith_per_mk: Mapping[str, Mapping[str, float]] = \
+        dataclasses.field(default_factory=dict)
     # chunk size (elements) at which packing rates were calibrated.
     reference_chunk: int = 4
     # element size in bytes for the default dtype.
@@ -111,6 +117,17 @@ class MachineSpec:
     def capacity(self, level: str) -> int:
         return int(self.capacities[self.level(level)])
 
+    def arith_rate_for(self, dtype: str, micro_kernel=None) -> float:
+        """Arithmetic rate (ops/s) for a dtype, refined per micro-kernel when
+        the spec carries an ``arith_per_mk`` table (paper §4).  With no table
+        entry this returns exactly ``arith_rate[dtype]``, so machines without
+        the refinement behave bit-identically."""
+        if micro_kernel is not None and self.arith_per_mk:
+            rate = self.arith_per_mk.get(dtype, {}).get(str(micro_kernel))
+            if rate is not None:
+                return rate
+        return self.arith_rate[dtype]
+
     def fingerprint(self) -> str:
         """Content identity for process-level caches.
 
@@ -133,6 +150,34 @@ class MachineSpec:
     def cache_token(self) -> str:
         """``name@fingerprint`` — the cache-key form of this machine."""
         return f"{self.name}@{self.fingerprint()}"
+
+    #: to_json keys that describe the machine's *geometry* — everything that
+    #: shapes a blocked loop nest (blockings, register feasibility) but not
+    #: the calibrated rates a fit replaces.
+    _GEOMETRY_KEYS = ("levels", "capacities", "level_aliases",
+                      "reference_chunk", "elem_bytes",
+                      "num_vector_registers", "register_lanes")
+
+    def geometry_fingerprint(self) -> str:
+        """Content identity of the geometry alone (capacities, levels,
+        aliases, register file — everything except the rate tables, the name
+        and provenance).
+
+        Measured GEMM wall times depend on the planned blocking, hence on the
+        geometry, but not on a template's placeholder rates; a Calibrator
+        refit changes rates only.  ``repro.measure.SampleStore`` keys samples
+        on this fingerprint so a campaign survives a refit, while samples
+        taken against a spec whose geometry has since changed (or whose name
+        now points at a different machine) can never silently calibrate it.
+        """
+        fp = self.__dict__.get("_geometry_fingerprint")
+        if fp is None:
+            d = self.to_json()
+            payload = {k: d.get(k) for k in self._GEOMETRY_KEYS}
+            fp = hashlib.sha1(json.dumps(payload, sort_keys=True)
+                              .encode()).hexdigest()[:16]
+            object.__setattr__(self, "_geometry_fingerprint", fp)
+        return fp
 
     # -- validation ----------------------------------------------------------
 
@@ -190,6 +235,20 @@ class MachineSpec:
                     and rate > 0):
                 raise err(f"{self.name}: arith_rate[{tag}] must be a "
                           f"positive finite number, got {rate!r}")
+        for tag, table in self.arith_per_mk.items():
+            if tag not in self.arith_rate:
+                raise err(f"{self.name}: arith_per_mk dtype {tag!r} has no "
+                          f"arith_rate fallback entry")
+            if not table:
+                raise err(f"{self.name}: arith_per_mk[{tag}] is empty")
+            for mk, rate in table.items():
+                if not _MK_TAG.match(mk or ""):
+                    raise err(f"{self.name}: bad micro-kernel key {mk!r} in "
+                              f"arith_per_mk[{tag}] (expected 'RxC')")
+                if not (isinstance(rate, (int, float))
+                        and math.isfinite(rate) and rate > 0):
+                    raise err(f"{self.name}: arith_per_mk[{tag}][{mk}] must "
+                              f"be a positive finite number, got {rate!r}")
         for field, lo in (("reference_chunk", 1), ("elem_bytes", 1),
                           ("num_vector_registers", 1), ("register_lanes", 1)):
             if int(getattr(self, field)) < lo:
@@ -214,6 +273,9 @@ class MachineSpec:
             "num_vector_registers": int(self.num_vector_registers),
             "register_lanes": int(self.register_lanes),
         }
+        if self.arith_per_mk:
+            d["arith_per_mk"] = {tag: {mk: float(r) for mk, r in tab.items()}
+                                 for tag, tab in self.arith_per_mk.items()}
         if self.level_aliases:
             d["level_aliases"] = dict(self.level_aliases)
         if self.provenance:
@@ -242,6 +304,10 @@ class MachineSpec:
                 transfer_rates=rates,
                 arith_rate={k: float(v)
                             for k, v in dict(d["arith_rate"]).items()},
+                arith_per_mk={tag: {mk: float(r)
+                                    for mk, r in dict(tab).items()}
+                              for tag, tab in
+                              dict(d.get("arith_per_mk") or {}).items()},
                 reference_chunk=int(d.get("reference_chunk", 4)),
                 elem_bytes=int(d.get("elem_bytes", 1)),
                 num_vector_registers=int(d.get("num_vector_registers", 32)),
@@ -294,6 +360,8 @@ class MachineSpec:
             {"scaled": {"arith": arith, "bw": bw}},
             transfer_rates={k: r * bw for k, r in self.transfer_rates.items()},
             arith_rate={k: r * arith for k, r in self.arith_rate.items()},
+            arith_per_mk={tag: {mk: r * arith for mk, r in tab.items()}
+                          for tag, tab in self.arith_per_mk.items()},
         )
 
     def with_capacities(self, name: str | None = None,
@@ -312,8 +380,13 @@ class MachineSpec:
     def with_dtype_rates(self, name: str | None = None,
                          **rates: float) -> "MachineSpec":
         """Merge entries into the per-dtype arithmetic-rate table, e.g.
-        ``spec.with_dtype_rates(int4=2 * spec.arith_rate["int8"])``."""
+        ``spec.with_dtype_rates(int4=2 * spec.arith_rate["int8"])``.
+        An overridden dtype also sheds any ``arith_per_mk`` refinement it
+        carried — the per-mk table was calibrated against the old rate and
+        would otherwise shadow the override."""
         merged = dict(self.arith_rate)
         merged.update({k: float(v) for k, v in rates.items()})
+        kept_mk = {dt: tab for dt, tab in self.arith_per_mk.items()
+                   if dt not in rates}
         return self._derive(name, "+dtypes", {"with_dtype_rates": dict(rates)},
-                            arith_rate=merged)
+                            arith_rate=merged, arith_per_mk=kept_mk)

@@ -1,0 +1,66 @@
+"""``repro.measure`` — measurement, sample storage and model validation.
+
+The fourth subsystem next to ``core`` / ``gemm`` / ``machines``: it closes
+the paper's measure→fit→validate loop that the analytic side only predicts.
+
+    >>> from repro import measure
+    >>> store = measure.SampleStore("measurements/host.jsonl")
+    >>> measure.run_campaign("table2", machine="host-cpu", dtype="f32",
+    ...                      harness="host-numpy", store=store)
+    >>> spec, fit = measure.fit_from_store(store, "host-cpu",
+    ...                                    name="host-cpu-fit", date=None)
+    >>> report = measure.validate_spec(spec, store)
+    >>> print(report.table())           # per-cell errors + MAPE
+
+Layers: ``harness`` (timing backends behind one protocol — host loop-nest
+replay, plan.execute under block_until_ready, the simulated closed-loop
+oracle), ``store`` (append-only JSONL samples keyed by the machine's
+geometry fingerprint), ``campaign`` (sweep-driven measurement grids feeding
+``Calibrator.fit``), ``validate`` (predicted-vs-measured accuracy reports).
+
+``python -m repro.measure run|fit|validate|report`` drives the same loop
+from the shell; CI runs a host smoke campaign + validation every build.
+"""
+from repro.measure.harness import (
+    Harness,
+    TimingResult,
+    blocked_loop_nest,
+    clock_overhead,
+    get_harness,
+    harness_names,
+    plan_loop_order,
+    time_callable,
+)
+from repro.measure.store import (
+    SAMPLE_SCHEMA,
+    Sample,
+    SampleStore,
+    StaleSampleError,
+)
+from repro.measure.campaign import (
+    CampaignResult,
+    DEFAULT_FIT_MKS,
+    fit_from_store,
+    grid_names,
+    grid_problems,
+    run_campaign,
+)
+from repro.measure.validate import (
+    REPORT_SCHEMA,
+    ValidationReport,
+    ValidationRow,
+    predict_plan,
+    predict_sample,
+    predict_samples,
+    validate_spec,
+)
+
+__all__ = [
+    "CampaignResult", "DEFAULT_FIT_MKS", "Harness", "REPORT_SCHEMA",
+    "SAMPLE_SCHEMA", "Sample", "SampleStore", "StaleSampleError",
+    "TimingResult", "ValidationReport", "ValidationRow",
+    "blocked_loop_nest", "clock_overhead", "fit_from_store", "get_harness",
+    "grid_names", "grid_problems", "harness_names", "plan_loop_order",
+    "predict_plan", "predict_sample", "predict_samples", "run_campaign",
+    "time_callable", "validate_spec",
+]

@@ -1,0 +1,218 @@
+"""Measurement campaigns: sweep-planned grids, measured and fit-ready.
+
+A campaign crosses a named problem grid with a pinned (variant x
+micro-kernel) axis through :func:`repro.gemm.sweep` — the same bulk planner
+the design-space studies use — and measures every planned grid point with
+one timing harness, appending :class:`Sample` records to a
+:class:`SampleStore`.  Pinning the selection matters: with an explicit
+variant + micro-kernel the derived blocking depends only on the spec's
+*geometry*, so the samples stay valid across rate refits (see
+``store.py``).
+
+``fit_from_store`` then closes the loop: it pulls a store's samples for a
+template spec and hands them to :class:`repro.machines.Calibrator` — exactly
+the ``(problem, micro-kernel, seconds)`` triples its vectorized
+least-squares fit consumes — making ``python -m repro.measure run`` +
+``fit`` the paper's "small collection of experiments" end to end.
+
+Grids:
+
+* ``table2`` / ``mobilenet`` — the 19 MobileNetV1 im2col GEMMs of Table 2
+  (``mobilenet`` is the alias; the dims are the paper's workload).
+* ``smoke``  — six small shapes that measure in ~2 s on a laptop; used by CI
+  and the planner benchmark.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Mapping, Sequence
+
+from repro.measure.harness import Harness, get_harness
+from repro.measure.store import Sample, SampleStore
+
+#: the default micro-kernel axis for calibration campaigns.  Spanning several
+#: shapes is load-bearing: under a single micro-kernel the streaming and
+#: arithmetic design columns are all proportional to m*n*k and the fit is
+#: provably rank-deficient (see Calibrator.design_matrix).
+DEFAULT_FIT_MKS = ((4, 24), (8, 12), (12, 8), (16, 4))
+
+_SMOKE_SHAPES = [(48, 96, 64), (96, 48, 80), (64, 160, 32),
+                 (128, 64, 96), (32, 32, 256), (80, 112, 48)]
+
+
+def grid_names() -> list[str]:
+    return ["mobilenet", "smoke", "table2"]
+
+
+def grid_problems(grid: str, dtype: str | None = None) -> list:
+    """The problems of a named grid, with an optional dtype override
+    (``smoke`` defaults to f32 so the host replay hits BLAS; the Table-2
+    grids default to the paper's int8)."""
+    from repro.gemm.api import GemmProblem
+
+    if grid in ("table2", "mobilenet"):
+        from repro.core.mobilenet import TABLE2
+        return [GemmProblem.coerce(row.problem, dtype=dtype)
+                for row in TABLE2]
+    if grid == "smoke":
+        return [GemmProblem.coerce(s, dtype=dtype, default_dtype="f32")
+                for s in _SMOKE_SHAPES]
+    raise KeyError(f"unknown campaign grid {grid!r}; have {grid_names()}")
+
+
+@dataclasses.dataclass
+class CampaignResult:
+    """The measured grid plus bookkeeping."""
+
+    grid: str
+    machine: str
+    harness: str
+    samples: list[Sample]
+    sweep_stats: dict = dataclasses.field(default_factory=dict)
+
+    @property
+    def measured_seconds(self) -> float:
+        return float(sum(s.seconds for s in self.samples))
+
+
+def run_campaign(grid: str, *, machine="host-cpu", harness="host-numpy",
+                 store: SampleStore | str | None = None,
+                 dtype: str | None = None, backend: str | None = None,
+                 variant=None, micro_kernels=DEFAULT_FIT_MKS,
+                 policy: str = "analytic",
+                 timing: Mapping[str, Any] | None = None,
+                 truth=None, interpret: bool = False, seed: int = 0,
+                 problems: Sequence | None = None,
+                 progress=None) -> CampaignResult:
+    """Plan, measure and (optionally) store one campaign.
+
+    ``backend`` defaults per harness: the host replay and the simulated
+    oracle measure BLIS-variant plans (``analytic-gap8``); the execute
+    harnesses measure their own plans (``pallas`` / ``reference``).  For
+    backends with a micro-kernel sweep axis the grid is problems x
+    ``micro_kernels`` under one ``variant`` (default B3A2C0); other backends
+    get one searched plan per problem.  ``truth`` feeds the simulated
+    harness; ``problems`` overrides the named grid's problem list.
+    """
+    from repro import gemm
+    from repro.core.variants import Variant
+    from repro.machines import resolve
+
+    spec = resolve(machine)
+    if problems is not None:
+        probs = list(problems)
+        grid = "custom"          # don't stamp samples with a grid they
+        # don't belong to — provenance must claim only measured workloads.
+    else:
+        probs = grid_problems(grid, dtype)
+    from repro.gemm.api import GemmProblem
+    missing = sorted({p.dtype for p in probs if isinstance(p, GemmProblem)
+                      and p.dtype not in spec.arith_rate})
+    if missing:
+        raise ValueError(
+            f"{spec.name} has no arith_rate entry for dtype(s) {missing} "
+            f"(have {sorted(spec.arith_rate)}); pass dtype= to the "
+            f"campaign (e.g. --dtype {sorted(spec.arith_rate)[0]})")
+    if isinstance(store, str):
+        store = SampleStore(store)
+    if not isinstance(harness, Harness):
+        kwargs: dict[str, Any] = {}
+        if harness == "simulated":
+            if truth is None:
+                raise ValueError("the simulated harness needs truth=<the "
+                                 "ground-truth machine>")
+            kwargs["truth"] = truth
+        elif harness in ("pallas", "reference"):
+            kwargs["interpret"] = interpret
+        harness = get_harness(harness, **kwargs)
+    if harness.supported_dtypes is not None:
+        unsup = sorted({p.dtype for p in probs
+                        if isinstance(p, GemmProblem)
+                        and p.dtype not in harness.supported_dtypes})
+        if unsup:
+            raise ValueError(
+                f"the {harness.name} harness cannot materialise operands "
+                f"for dtype(s) {unsup}; it supports "
+                f"{sorted(harness.supported_dtypes)}")
+    if backend is None:
+        backend = {"pallas": "pallas", "reference": "reference"}.get(
+            harness.name, "analytic-gap8")
+    variant = variant or Variant.B3A2C0
+
+    res = gemm.sweep(probs, backends=[backend], machines=[spec],
+                     dtypes=[dtype] if dtype else None,
+                     policies=[policy], variants=[variant],
+                     micro_kernels=list(micro_kernels), cache=False)
+    samples: list[Sample] = []
+    for i, row in enumerate(res.rows):
+        t = harness.measure(row.plan, timing=timing, seed=seed + i)
+        s = Sample.from_measurement(row.plan, t, harness.name, spec,
+                                    meta={"grid": grid})
+        if store is not None:
+            store.append(s)
+        samples.append(s)
+        if progress is not None:
+            progress(s)
+    return CampaignResult(grid=grid, machine=spec.name, harness=harness.name,
+                          samples=samples, sweep_stats=dict(res.stats))
+
+
+def fit_from_store(store: SampleStore | str, template, *,
+                   name: str | None = None, date: str | None = None,
+                   policy: str | None = None, per_mk_arith: bool = False,
+                   register: bool = False, manifest_dir: str | None = None,
+                   on_nonpositive: str = "raise",
+                   weighting: str = "relative",
+                   allow_stale: bool = False):
+    """Fit ``template``'s rates from a store's measured samples.
+
+    Pulls the samples whose geometry fingerprint matches the template
+    (stale ones raise, see :meth:`SampleStore.for_machine`), groups them
+    into the ``(problem, micro-kernel, seconds)`` triples
+    :meth:`Calibrator.fit` consumes, and runs the vectorized least-squares
+    fit.  Real measurements default to the relative-error solve
+    (``weighting="relative"``) so MAPE over a wide-dynamic-range grid is
+    what gets minimised; pass ``"absolute"`` for the plain solve.
+    Returns ``(spec, FitReport)``.
+    """
+    from repro.core.variants import MicroKernel, Variant
+    from repro.machines import resolve
+    from repro.machines.calibrate import Calibrator
+
+    if isinstance(store, str):
+        store = SampleStore(store)
+    spec = resolve(template)
+    samples = [s for s in store.for_machine(spec, allow_stale=allow_stale)
+               if s.micro_kernel is not None]
+    if not samples:
+        raise ValueError(
+            f"{store.path}: no BLIS-model samples for machine {spec.name!r} "
+            f"(geometry {spec.geometry_fingerprint()}) — run a campaign "
+            f"first (python -m repro.measure run)")
+    variants = sorted({s.variant for s in samples})
+    if len(variants) > 1:
+        raise ValueError(
+            f"samples span variants {variants}; fit one variant at a time "
+            f"(filter the store or run separate campaigns)")
+    if policy is None:
+        policies = sorted({s.policy for s in samples})
+        if len(policies) > 1:
+            raise ValueError(f"samples span policies {policies}; pass "
+                             f"policy= explicitly")
+        policy = policies[0]
+    cal = Calibrator(spec, model="blis", variant=Variant(variants[0]),
+                     policy=policy)
+    probs = [s.problem for s in samples]
+    mks = [MicroKernel(*map(int, s.micro_kernel.split("x")))
+           for s in samples]
+    seconds = [s.seconds for s in samples]
+    harnesses = sorted({s.harness for s in samples})
+    return cal.fit(
+        probs, seconds, micro_kernels=mks, date=date, name=name,
+        register=register, manifest_dir=manifest_dir,
+        per_mk_arith=per_mk_arith, on_nonpositive=on_nonpositive,
+        weighting=weighting,
+        extra_provenance={"measure": {
+            "store": store.path, "harnesses": harnesses,
+            "grids": sorted({s.meta.get("grid", "?") for s in samples}),
+        }})

@@ -1,0 +1,644 @@
+"""The measurement & model-validation subsystem (ISSUE 4).
+
+Acceptance: simulator-generated times pushed through the ``measure``
+store→fit→validate loop recover every exercised rate to <1% and report
+≈0 MAPE; the host-numpy harness replays plans as blocked loop nests and a
+real smoke campaign fits and validates end to end; the per-micro-kernel
+arithmetic table (paper §4) round-trips the manifest schema, refines the
+batched GAP8 engine, and is recoverable by the closed loop.
+"""
+import dataclasses
+import json
+import math
+
+import numpy as np
+import pytest
+
+from repro import gemm, machines, measure
+from repro.core.mobilenet import TABLE2
+from repro.core.simulator import (
+    best_microkernel_batch,
+    search_batch,
+    simulate,
+)
+from repro.core.variants import MicroKernel, Variant
+from repro.machines import MachineSpec, SpecValidationError
+
+
+@pytest.fixture(autouse=True)
+def _clean_registry():
+    before = set(machines.list_machines())
+    yield
+    for name in set(machines.list_machines()) - before:
+        machines.unregister(name)
+    machines.load_zoo()
+
+
+def _store(tmp_path, name="samples.jsonl") -> measure.SampleStore:
+    return measure.SampleStore(str(tmp_path / name))
+
+
+# ---------------------------------------------------------------------------
+# Timing harness
+# ---------------------------------------------------------------------------
+
+
+def test_time_callable_warms_up_and_aggregates():
+    calls = []
+    res = measure.time_callable(lambda: calls.append(1), warmup=2, rounds=3)
+    assert res.rounds >= 3
+    assert res.calls == res.rounds                   # 1 call per round
+    assert len(calls) == res.calls + 2               # + the 2 warmup calls
+    assert res.seconds > 0
+    assert res.seconds == pytest.approx(
+        sorted(res.round_minima)[len(res.round_minima) // 2], rel=0.5)
+    assert res.rounds <= 10                          # bounded even if noisy
+
+
+def test_time_callable_repeats_until_stable():
+    # zero tolerance: noop timings never agree exactly, so the stability
+    # loop must add rounds and stop at the max_rounds bound
+    res = measure.time_callable(lambda: None, rounds=2, max_rounds=4,
+                                stable_rel=0.0)
+    assert 2 <= res.rounds <= 4
+
+
+def test_core_calibrate_time_delegates_to_harness():
+    from repro.core.calibrate import _time
+    calls = []
+    t = _time(lambda: calls.append(1), reps=3)
+    assert t > 0
+    assert len(calls) >= 4        # 3 rounds + at least the 1 warmup call
+
+
+def test_blocked_loop_nest_matches_reference():
+    rng = np.random.default_rng(0)
+    a = rng.standard_normal((37, 23)).astype(np.float32)
+    b = rng.standard_normal((23, 41)).astype(np.float32)
+    for order in ("jpi", "jip", "pji"):
+        c = np.zeros((37, 41), np.float32)
+        out = measure.blocked_loop_nest(a, b, c, 16, 12, 8, order)
+        np.testing.assert_allclose(out, a @ b, rtol=1e-3, atol=1e-4)
+    with pytest.raises(ValueError, match="permute"):
+        measure.blocked_loop_nest(a, b, np.zeros((37, 41), np.float32),
+                                  16, 12, 8, "jjj")
+
+
+def test_plan_loop_order_follows_selection():
+    """The host replay nests its loops the way the plan's selection says:
+    C3B2A0 iterates p innermost, the B3 variants iterate i innermost, tile
+    plans follow the grid order."""
+    assert measure.plan_loop_order(
+        gemm.plan((64, 96, 48), backend="analytic-gap8",
+                  variant="B3A2C0", cache=False)) == "jpi"
+    assert measure.plan_loop_order(
+        gemm.plan((64, 96, 48), backend="analytic-gap8",
+                  variant="C3B2A0", cache=False)) == "jip"
+    assert measure.plan_loop_order(
+        gemm.plan((64, 96, 48), backend="analytic-gap8",
+                  variant="B3C2A0", cache=False)) == "jpi"
+    tile_plan = gemm.plan((256, 512, 128), backend="analytic-tpu",
+                          cache=False)
+    want = "jip" if tile_plan.selection.order.value == "k_inner" else "pji"
+    assert measure.plan_loop_order(tile_plan) == want
+    assert measure.plan_loop_order(
+        gemm.plan((64, 96, 48), backend="reference", cache=False)) == "jpi"
+
+
+def test_host_numpy_harness_measures_plan():
+    plan = gemm.plan((64, 96, 48), backend="analytic-gap8",
+                     machine="host-cpu", dtype="f32", cache=False)
+    h = measure.get_harness("host-numpy")
+    res = h.measure(plan, timing={"warmup": 0, "rounds": 1})
+    assert res.seconds > 0 and res.rounds >= 1
+
+
+def test_plan_blocking_dims_views():
+    gp = gemm.plan((64, 96, 48), backend="analytic-gap8", cache=False)
+    bd = gp.blocking_dims()
+    blk = gp.selection.blocking
+    assert bd == (blk.m_c, blk.n_c, blk.k_c)
+    tp = gemm.plan((256, 512, 128), backend="analytic-tpu", cache=False)
+    t = tp.selection
+    assert tp.blocking_dims() == (t.bm, t.bn, t.bk)
+    rp = gemm.plan((64, 96, 48), backend="reference", cache=False)
+    assert rp.blocking_dims() == (64, 96, 48)
+
+
+def test_get_harness_unknown_and_simulated_requires_truth(tmp_path):
+    with pytest.raises(KeyError, match="unknown timing harness"):
+        measure.get_harness("cuda")
+    with pytest.raises(ValueError, match="truth"):
+        measure.run_campaign("smoke", harness="simulated",
+                             store=_store(tmp_path))
+
+
+def test_campaign_rejects_unsupported_dtype_early():
+    """smoke defaults to f32; an int8-only machine must fail with a clear
+    pointer to dtype=, not a KeyError deep inside planning."""
+    with pytest.raises(ValueError, match="no arith_rate entry.*dtype"):
+        measure.run_campaign("smoke", machine="gap8-fc",
+                             harness="simulated", truth="gap8-fc")
+
+
+def test_campaign_rejects_dtype_the_harness_cannot_materialise():
+    """A harness declares which dtypes it can build operands for; the
+    campaign must refuse up front, not KeyError mid-measurement."""
+
+    class Int8Only(measure.Harness):
+        name = "int8-only"
+        supported_dtypes = frozenset({"int8"})
+
+    with pytest.raises(ValueError, match="int8-only harness cannot"):
+        measure.run_campaign("smoke", machine="host-cpu",
+                             harness=Int8Only())   # smoke defaults to f32
+    assert measure.get_harness("host-numpy").supported_dtypes == \
+        {"int8", "bf16", "f32"}
+
+
+def test_campaign_problem_override_is_not_stamped_with_grid(tmp_path):
+    store = _store(tmp_path)
+    res = measure.run_campaign("table2", machine="gap8-fc",
+                               harness="simulated", truth="gap8-fc",
+                               dtype="int8", store=store,
+                               problems=[(100, 100, 100)])
+    assert res.grid == "custom"
+    assert all(s.meta["grid"] == "custom" for s in res.samples)
+
+
+# ---------------------------------------------------------------------------
+# Sample store
+# ---------------------------------------------------------------------------
+
+
+def _mk_sample(spec, seconds=1.0, **over):
+    d = dict(m=64, n=96, k=48, dtype="int8", seconds=seconds,
+             harness="simulated", machine=spec.name,
+             machine_fingerprint=spec.geometry_fingerprint(),
+             variant="B3A2C0", micro_kernel="4x24")
+    d.update(over)
+    return measure.Sample(**d)
+
+
+def test_sample_store_roundtrip(tmp_path):
+    spec = machines.get("gap8-fc")
+    store = _store(tmp_path)
+    wrote = [_mk_sample(spec, seconds=float(i + 1),
+                        micro_kernel=f"{4 * (i + 1)}x4",
+                        meta={"grid": "smoke"}) for i in range(3)]
+    assert store.extend(wrote) == 3
+    got = list(store)
+    assert got == wrote
+    assert len(store) == 3
+    assert store.samples(micro_kernel="4x4") == [wrote[0]]
+    # appending is non-destructive
+    store.append(_mk_sample(spec, seconds=9.0))
+    assert list(store)[:3] == wrote
+
+
+def test_sample_store_rejects_fingerprint_mismatch(tmp_path):
+    spec = machines.get("gap8-fc")
+    store = _store(tmp_path)
+    store.append(_mk_sample(spec))
+    # same name, different geometry: the spec changed since the campaign
+    changed = spec.with_capacities(spec.name, L1=64 * 1024)
+    assert changed.name == spec.name
+    assert changed.geometry_fingerprint() != spec.geometry_fingerprint()
+    with pytest.raises(measure.StaleSampleError, match="different geometry"):
+        store.for_machine(changed)
+    assert store.for_machine(changed, allow_stale=True) == []
+    # unrelated machines are ignored, not stale
+    assert store.for_machine(machines.get("gap9-fc")) == []
+    # the matching spec still reads its samples (rates don't matter)
+    refit = spec.scaled(arith=2.0, name=spec.name)
+    assert len(store.for_machine(refit)) == 1
+
+
+def test_sample_store_lineage_excludes_same_geometry_ablations(tmp_path):
+    """A rates-only ablation shares its base's geometry; its samples must
+    still be invisible to the base (and vice versa) — only the calibration
+    lineage (own name, or the fit's template) may supply samples."""
+    base = machines.get("tpu-v5e")
+    half = machines.get("tpu-v5e-bw-half")
+    assert base.geometry_fingerprint() == half.geometry_fingerprint()
+    store = _store(tmp_path)
+    store.append(_mk_sample(base, machine=base.name))
+    assert store.for_machine(half) == []          # not half's lineage
+    assert len(store.for_machine(base)) == 1
+    # a spec *fitted from* the sampled template reads them via provenance
+    gap8 = machines.get("gap8-fc")
+    store2 = _store(tmp_path, "lineage.jsonl")
+    store2.append(_mk_sample(gap8))
+    fitted = dataclasses.replace(
+        gap8, name="gap8-fit-lineage",
+        provenance={"base": "gap8-fc", "fit": {"samples": 1}})
+    assert len(store2.for_machine(fitted)) == 1
+    # ...but a transform-derived spec does not inherit them
+    derived = gap8.scaled(arith=2.0, name="gap8-derived-lineage")
+    assert derived.provenance["base"] == "gap8-fc"
+    assert store2.for_machine(derived) == []
+
+
+def test_sample_store_rejects_bad_schema(tmp_path):
+    store = _store(tmp_path)
+    store.append(_mk_sample(machines.get("gap8-fc")))
+    with open(store.path, "a") as f:
+        f.write(json.dumps({"schema": "other/v9", "m": 1}) + "\n")
+    with pytest.raises(ValueError, match="bad sample record"):
+        list(store)
+
+
+# ---------------------------------------------------------------------------
+# Closed loop (acceptance): simulator times -> store -> fit -> validate
+# ---------------------------------------------------------------------------
+
+
+def _seed_template(truth, name):
+    """Same geometry as truth, deliberately wrong rates."""
+    t = truth.scaled(arith=3.0, bw=0.4, name=name)
+    assert t.geometry_fingerprint() == truth.geometry_fingerprint()
+    return t
+
+
+def test_closed_loop_recovers_rates_and_zero_mape(tmp_path):
+    truth = machines.get("gap8-fc")
+    template = _seed_template(truth, "gap8-seed")
+    store = _store(tmp_path)
+    res = measure.run_campaign("table2", machine=template,
+                               harness="simulated", truth=truth,
+                               store=store)
+    assert len(res.samples) == len(TABLE2) * len(measure.DEFAULT_FIT_MKS)
+    assert res.harness == "simulated"
+
+    spec, report = measure.fit_from_store(store, template,
+                                          name="gap8-recovered", date=None)
+    # every rate the campaign exercised comes back to <1% (in fact ~1e-12)
+    assert not report.dropped
+    for col in report.columns:
+        if col.startswith("rate:"):
+            o, _, d = col[len("rate:"):].partition("->")
+            assert spec.transfer_rates[(o, d)] == pytest.approx(
+                truth.transfer_rates[(o, d)], rel=1e-2)
+        else:
+            assert spec.arith_rate[col[len("arith:"):]] == pytest.approx(
+                truth.arith_rate[col[len("arith:"):]], rel=1e-2)
+
+    val = measure.validate_spec(spec, store)
+    assert val.mape == pytest.approx(0.0, abs=1e-6)
+    assert val.finite
+    assert len(val.rows) == len(res.samples)
+    # the wrong-rate template, validated against the same store, is way off
+    bad = measure.validate_spec(template, store)
+    assert bad.mape > 50.0
+
+
+def test_closed_loop_recovers_per_mk_arith_table(tmp_path):
+    """Paper §4's refinement round-trips: per-micro-kernel truth rates are
+    recovered by the per-mk fit (padded policy — under the analytic policy
+    the system is provably rank-deficient, see design_matrix)."""
+    base = machines.get("gap8-fc")
+    table = {"int8": {"4x24": 6.2e9, "8x12": 5.1e9,
+                      "12x8": 4.4e9, "16x4": 3.3e9}}
+    truth = dataclasses.replace(base, name="gap8-permk-truth",
+                                arith_per_mk=table).validate()
+    template = _seed_template(truth, "gap8-permk-seed")
+    store = _store(tmp_path)
+    measure.run_campaign("table2", machine=template, harness="simulated",
+                         truth=truth, policy="padded", store=store)
+    spec, report = measure.fit_from_store(
+        store, template, name="gap8-permk-fit", date=None, per_mk_arith=True)
+    for mk, want in table["int8"].items():
+        assert spec.arith_per_mk["int8"][mk] == pytest.approx(want, rel=1e-2)
+    val = measure.validate_spec(spec, store)
+    assert val.mape == pytest.approx(0.0, abs=1e-6)
+    # the analytic-policy per-mk system is rank-deficient and refuses
+    store2 = _store(tmp_path, "analytic.jsonl")
+    measure.run_campaign("smoke", machine=template, harness="simulated",
+                         truth=truth, dtype="int8", store=store2)
+    with pytest.raises(ValueError, match="rank-deficient"):
+        measure.fit_from_store(store2, template, date=None,
+                               per_mk_arith=True)
+
+
+def test_fit_drop_nonpositive_keeps_template_rate(tmp_path):
+    """Measured times inconsistent with one traffic term: the default fit
+    refuses; on_nonpositive='drop' eliminates the column and keeps the
+    template's rate for it, recording the drop in provenance."""
+    truth = machines.get("gap8-fc")
+    template = _seed_template(truth, "gap8-drop-seed")
+    store = _store(tmp_path)
+
+    probs = [r.problem for r in TABLE2[:8]]
+    mks = [MicroKernel(*mk) for mk in measure.DEFAULT_FIT_MKS] * 2
+    for p, mk in zip(probs, mks):
+        cb = simulate(truth, Variant.B3A2C0, mk, p)
+        # subtract pack_A twice: the implied M->L2 inverse rate is negative
+        seconds = cb.total - 2.0 * cb.components["pack_A"]
+        plan = gemm.plan(p, backend="analytic-gap8", machine=template,
+                         variant=Variant.B3A2C0, micro_kernel=mk,
+                         cache=False)
+        t = measure.TimingResult(seconds=seconds, rounds=1, calls=1,
+                                 spread=0.0, round_minima=(seconds,))
+        store.append(measure.Sample.from_measurement(plan, t, "simulated",
+                                                     template))
+    with pytest.raises(ValueError, match="non-positive"):
+        measure.fit_from_store(store, template, date=None,
+                               weighting="absolute")
+    spec, report = measure.fit_from_store(store, template, date=None,
+                                          weighting="absolute",
+                                          on_nonpositive="drop")
+    assert "rate:M->L2" in report.dropped
+    assert spec.transfer_rates[("M", "L2")] == \
+        template.transfer_rates[("M", "L2")]
+    # every emitted rate is positive and the spec still validates/simulates
+    assert all(r > 0 for r in spec.transfer_rates.values())
+    assert measure.validate_spec(spec, store).finite
+    assert "dropped_columns" in spec.provenance["fit"]
+    # 'free' marks the term costless instead of keeping the template rate
+    from repro.machines.calibrate import FREE_RATE
+    spec_f, rep_f = measure.fit_from_store(store, template, date=None,
+                                           weighting="absolute",
+                                           on_nonpositive="free")
+    assert "rate:M->L2" in rep_f.dropped
+    assert spec_f.transfer_rates[("M", "L2")] == FREE_RATE
+    assert spec_f.provenance["fit"]["nonpositive_policy"] == "free"
+    # the recorded residual describes the *emitted* spec: predicting the
+    # samples with each fitted spec reproduces its report's RMS
+    for s, r in ((spec, report), (spec_f, rep_f)):
+        preds = measure.predict_samples(s, list(store))
+        meas = [smp.seconds for smp in store]
+        rms = float(np.sqrt(np.mean((np.array(preds) - np.array(meas)) ** 2)))
+        assert rms == pytest.approx(r.residual_rms_s, rel=1e-6)
+
+
+def test_measure_host_sheds_template_per_mk_table(monkeypatch):
+    from repro.core import calibrate as cal_mod
+    monkeypatch.setattr(cal_mod, "measure_packing_rate", lambda c: 2.0e9)
+    monkeypatch.setattr(cal_mod, "measure_copy_rate", lambda: 8.0e9)
+    monkeypatch.setattr(cal_mod, "measure_arith_rate", lambda: 5.0e10)
+    stale = dataclasses.replace(
+        machines.get("host-cpu"), name="host-cpu",
+        arith_per_mk={"f32": {"4x24": 1.0e9}})
+    machines.register(stale, overwrite=True)
+    spec = machines.Calibrator.measure_host("host-shed-test")
+    assert spec.arith_per_mk == {}
+    assert spec.arith_rate_for("f32", MicroKernel(4, 24)) == 5.0e10
+
+
+def test_fit_from_store_rejects_mixed_axes(tmp_path):
+    spec = machines.get("gap8-fc")
+    store = _store(tmp_path)
+    store.append(_mk_sample(spec, variant="B3A2C0"))
+    store.append(_mk_sample(spec, variant="C3B2A0"))
+    with pytest.raises(ValueError, match="span variants"):
+        measure.fit_from_store(store, spec, date=None)
+    empty = _store(tmp_path, "empty.jsonl")
+    with pytest.raises(ValueError, match="no BLIS-model samples"):
+        measure.fit_from_store(empty, spec, date=None)
+
+
+# ---------------------------------------------------------------------------
+# Validation-report math
+# ---------------------------------------------------------------------------
+
+
+def test_validation_report_math(tmp_path):
+    """Hand-built measurements at known offsets from the prediction: the
+    per-cell errors, MAPE, worst cell and breakdowns are exact."""
+    spec = machines.get("gap8-fc")
+    prob = TABLE2[9].problem
+    offsets = {"4x24": 1.25, "8x12": 1.0, "12x8": 0.8}
+    samples = []
+    for mk_s, factor in offsets.items():
+        mk = MicroKernel(*map(int, mk_s.split("x")))
+        pred = simulate(spec, Variant.B3A2C0, mk, prob).total
+        samples.append(_mk_sample(spec, seconds=pred * factor,
+                                  m=prob.m, n=prob.n, k=prob.k,
+                                  micro_kernel=mk_s))
+    val = measure.validate_spec(spec, samples)
+    by_mk = {r.sample.micro_kernel: r for r in val.rows}
+    assert by_mk["4x24"].rel_err == pytest.approx(1 / 1.25 - 1)
+    assert by_mk["8x12"].ape == pytest.approx(0.0, abs=1e-12)
+    assert by_mk["12x8"].rel_err == pytest.approx(0.25)
+    assert val.mape == pytest.approx(100 * (0.2 + 0.0 + 0.25) / 3)
+    assert val.worst.sample.micro_kernel == "12x8"
+    assert val.median_ape == pytest.approx(20.0)
+    bd = val.per_micro_kernel()
+    assert set(bd) == set(offsets)
+    assert bd["12x8"]["bias_pct"] == pytest.approx(25.0)
+    assert val.per_dtype()["int8"]["cells"] == 3
+    # persisted JSON round-trips to the same numbers
+    path = str(tmp_path / "report.json")
+    val.save(path)
+    loaded = measure.ValidationReport.load(path)
+    assert loaded.mape == pytest.approx(val.mape)
+    assert loaded.worst.sample.cell == val.worst.sample.cell
+
+
+def test_validation_respects_fingerprint_guard(tmp_path):
+    spec = machines.get("gap8-fc")
+    store = _store(tmp_path)
+    store.append(_mk_sample(spec, seconds=1.0))
+    changed = spec.with_capacities(spec.name, L2=1024)
+    with pytest.raises(measure.StaleSampleError):
+        measure.validate_spec(changed, store)
+
+
+# ---------------------------------------------------------------------------
+# arith_per_mk schema + engine consumption
+# ---------------------------------------------------------------------------
+
+
+def _with_table(spec, name="gap8-mk-table"):
+    return dataclasses.replace(
+        spec, name=name,
+        arith_per_mk={"int8": {"8x12": 2.0 * spec.arith_rate["int8"]}})
+
+
+def test_arith_per_mk_roundtrips_manifest(tmp_path):
+    spec = _with_table(machines.get("gap8-fc")).validate()
+    assert MachineSpec.from_json(spec.to_json()) == spec
+    path = spec.to_manifest(str(tmp_path / "mk.json"))
+    assert MachineSpec.from_manifest(path).arith_per_mk == spec.arith_per_mk
+    # absent table stays absent in the manifest (bit-stable zoo files)
+    assert "arith_per_mk" not in machines.get("gap8-fc").to_json()
+
+
+def test_arith_per_mk_validation():
+    base = machines.get("gap8-fc")
+    bad_mk = dataclasses.replace(base, arith_per_mk={"int8": {"8by12": 1.0}})
+    with pytest.raises(SpecValidationError, match="micro-kernel key"):
+        bad_mk.validate()
+    bad_dt = dataclasses.replace(base, arith_per_mk={"int4": {"8x12": 1e9}})
+    with pytest.raises(SpecValidationError, match="fallback"):
+        bad_dt.validate()
+    bad_rate = dataclasses.replace(base,
+                                   arith_per_mk={"int8": {"8x12": -1.0}})
+    with pytest.raises(SpecValidationError, match="positive finite"):
+        bad_rate.validate()
+    empty = dataclasses.replace(base, arith_per_mk={"int8": {}})
+    with pytest.raises(SpecValidationError, match="empty"):
+        empty.validate()
+
+
+def test_arith_per_mk_absent_table_is_bit_identical():
+    base = machines.get("gap8-fc")
+    probs = [r.problem for r in TABLE2]
+    with_empty = dataclasses.replace(base, arith_per_mk={})
+    a = search_batch(base, probs)
+    b = search_batch(with_empty, probs)
+    for x, y in zip(a, b):
+        assert x.total == y.total and x.micro_kernel == y.micro_kernel
+
+
+def test_arith_per_mk_refines_simulation_and_selection():
+    base = machines.get("gap8-fc")
+    spec = _with_table(base)
+    prob = TABLE2[9].problem
+    mk = MicroKernel(8, 12)
+    got = simulate(spec, Variant.B3A2C0, mk, prob)
+    want = simulate(base, Variant.B3A2C0, mk, prob)
+    assert got.arith == pytest.approx(want.arith / 2.0)
+    # untabled micro-kernels fall back to the shared rate
+    other = simulate(spec, Variant.B3A2C0, MicroKernel(4, 24), prob)
+    assert other.arith == simulate(base, Variant.B3A2C0,
+                                   MicroKernel(4, 24), prob).arith
+    # the batched engine consumes the table identically to the scalar path
+    batch = best_microkernel_batch(spec, Variant.B3A2C0, [prob])
+    scal = min((simulate(spec, Variant.B3A2C0, m, prob)
+                for m in (MicroKernel(4, 24), MicroKernel(8, 12),
+                          MicroKernel(12, 8))),
+               key=lambda cb: cb.total)
+    assert batch[0].total <= scal.total
+    assert batch[0].arith == simulate(spec, Variant.B3A2C0,
+                                      batch[0].micro_kernel, prob).arith
+    # on an arithmetic-bound machine a per-mk advantage flips the selection
+    fast = base.scaled(bw=1e6, name="gap8-arith-bound")
+    boosted = dataclasses.replace(
+        fast, name="gap8-mk-boost",
+        arith_per_mk={"int8": {"8x12": 2.0 * base.arith_rate["int8"]}})
+    assert best_microkernel_batch(
+        fast, Variant.B3A2C0, [prob])[0].micro_kernel != MicroKernel(8, 12)
+    assert best_microkernel_batch(
+        boosted, Variant.B3A2C0, [prob])[0].micro_kernel == MicroKernel(8, 12)
+
+
+def test_shared_arith_refit_sheds_stale_per_mk_table(tmp_path):
+    """A shared-rate refit supersedes any per-mk table the template carried
+    for that dtype — the fitted spec must not predict through stale per-mk
+    rates the solve never saw."""
+    base = machines.get("gap8-fc")
+    template = dataclasses.replace(
+        _seed_template(base, "gap8-stale-seed"),
+        arith_per_mk={"int8": {"4x24": base.arith_rate["int8"]}})
+    store = _store(tmp_path)
+    measure.run_campaign("table2", machine=template, harness="simulated",
+                         truth=base.scaled(arith=2.0, name="gap8-2x"),
+                         store=store)
+    spec, _ = measure.fit_from_store(store, template, name="gap8-shed",
+                                     date=None)
+    assert "int8" not in spec.arith_per_mk
+    assert spec.arith_rate_for("int8", MicroKernel(4, 24)) == \
+        spec.arith_rate["int8"]
+    assert measure.validate_spec(spec, store).mape == \
+        pytest.approx(0.0, abs=1e-6)
+
+
+def test_with_dtype_rates_override_sheds_per_mk_entries():
+    spec = _with_table(machines.get("gap8-fc"))
+    over = spec.with_dtype_rates(int8=2.0 * spec.arith_rate["int8"],
+                                 name="gap8-mk-override")
+    assert "int8" not in over.arith_per_mk
+    assert over.arith_rate_for("int8", MicroKernel(8, 12)) == \
+        2.0 * spec.arith_rate["int8"]
+    # untouched dtypes keep their refinement
+    multi = dataclasses.replace(
+        spec, arith_rate={**spec.arith_rate, "f32": 1e9},
+        arith_per_mk={**spec.arith_per_mk, "f32": {"4x24": 2e9}})
+    kept = multi.with_dtype_rates(int8=1e9, name="gap8-mk-keep")
+    assert kept.arith_per_mk == {"f32": {"4x24": 2e9}}
+
+
+def test_calibrator_per_mk_design_matrix_batch_equals_scalar():
+    cal = machines.Calibrator("gap8-fc", policy="padded")
+    rng = np.random.default_rng(7)
+    probs = [(int(m), int(n), int(k)) for m, n, k in
+             zip(rng.integers(16, 2048, 12), rng.integers(16, 2048, 12),
+                 rng.integers(16, 4096, 12))]
+    mks = [MicroKernel(*measure.DEFAULT_FIT_MKS[i % 4]) for i in range(12)]
+    A, cols = cal.design_matrix(probs, mks, per_mk_arith=True)
+    B, cols2 = cal.design_matrix_scalar(probs, mks, per_mk_arith=True)
+    assert cols == cols2
+    assert np.array_equal(A, B)
+    assert sum(c.startswith("arith:int8@") for c in cols) == 4
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+
+def test_cli_closed_loop(tmp_path, capsys):
+    from repro.measure.__main__ import main
+
+    store = str(tmp_path / "cli.jsonl")
+    assert main(["run", "--grid", "smoke", "--backend", "simulated",
+                 "--truth", "gap8-fc", "--machine", "gap8-fc",
+                 "--dtype", "int8", "--store", store]) == 0
+    assert "24 samples via simulated" in capsys.readouterr().out
+    assert main(["fit", "--store", store, "--template", "gap8-fc",
+                 "--name", "gap8-cli-fit", "--out", str(tmp_path)]) == 0
+    out = capsys.readouterr().out
+    assert "fitted gap8-cli-fit" in out and "rate:M->L2" in out
+    manifest = str(tmp_path / "gap8-cli-fit.json")
+    report_path = str(tmp_path / "report.json")
+    assert main(["validate", "--store", store, "--machine", manifest,
+                 "--json", report_path]) == 0
+    out = capsys.readouterr().out
+    assert "MAPE 0.00%" in out
+    assert main(["report", "--json", report_path, "--limit", "2"]) == 0
+    assert "mape_pct" in capsys.readouterr().out
+
+
+def test_machines_calibrate_cli_runs_full_fit(tmp_path, capsys,
+                                              monkeypatch):
+    """`python -m repro.machines calibrate --grid ...` is the whole loop:
+    micro-experiment seed -> host-numpy campaign -> rate fit -> report."""
+    from repro.core import calibrate as cal_mod
+    from repro.machines.__main__ import main
+
+    monkeypatch.setattr(cal_mod, "measure_packing_rate", lambda c: 2.0e9)
+    monkeypatch.setattr(cal_mod, "measure_copy_rate", lambda: 8.0e9)
+    monkeypatch.setattr(cal_mod, "measure_arith_rate", lambda: 5.0e10)
+    store = str(tmp_path / "calib.jsonl")
+    assert main(["calibrate", "--name", "host-cli-fit", "--grid", "smoke",
+                 "--store", store, "--out", str(tmp_path),
+                 "--date", "2026-07-27"]) == 0
+    out = capsys.readouterr().out
+    assert "measured 24 samples" in out and "validation MAPE" in out
+    fitted = machines.get("host-cli-fit")
+    assert machines.source_of("host-cli-fit") == "calibrated"
+    assert fitted.provenance["fit"]["samples"] == 24
+    assert len(measure.SampleStore(store)) == 24
+    # the persisted manifest is the fitted spec
+    persisted = MachineSpec.from_manifest(str(tmp_path /
+                                              "host-cli-fit.json"))
+    assert persisted == fitted
+
+
+def test_cli_host_smoke_run(tmp_path, capsys):
+    from repro.measure.__main__ import main
+
+    store = str(tmp_path / "host.jsonl")
+    assert main(["run", "--grid", "smoke", "--backend", "host-numpy",
+                 "--machine", "host-cpu", "--store", store,
+                 "--rounds", "1", "--warmup", "0",
+                 "--mks", "4x24,8x12"]) == 0
+    samples = list(measure.SampleStore(store))
+    assert len(samples) == 12                 # 6 smoke shapes x 2 mks
+    assert all(s.seconds > 0 and s.harness == "host-numpy"
+               for s in samples)
+    assert {s.micro_kernel for s in samples} == {"4x24", "8x12"}
+    # a validation of the template against real host samples is finite
+    val = measure.validate_spec("host-cpu", store)
+    assert val.finite and math.isfinite(val.worst.ape)
