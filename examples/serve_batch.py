@@ -2,7 +2,13 @@
 
     PYTHONPATH=src python examples/serve_batch.py --arch zamba2-1.2b
     PYTHONPATH=src python examples/serve_batch.py --autoconfigure \\
-        --machine 'tpu-v5e*'    # sweep-driven max_batch/plan selection
+        --machine 'zoo/*'       # memory-aware zoo-wide machine/batch pick
+
+With ``--autoconfigure`` the engine comes from the ranked deployment grid
+(``repro.serving.plan_deployment``): cells whose modelled footprint
+(weights + KV cache + workspace) exceeds a machine's deployment-memory
+budget are pruned before the GEMM sweep, and the surviving cell with the
+best predicted decode throughput is frozen into the engine.
 """
 import argparse
 import os
@@ -21,10 +27,11 @@ def main() -> None:
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--autoconfigure", action="store_true")
     ap.add_argument("--machine", default=None)
+    ap.add_argument("--no-memory", action="store_true")
     a = ap.parse_args()
     serve_demo(a.arch, n_requests=a.requests, max_new=a.max_new,
                max_batch=a.max_batch, autoconfigure=a.autoconfigure,
-               machine=a.machine)
+               machine=a.machine, memory=not a.no_memory)
 
 
 if __name__ == "__main__":

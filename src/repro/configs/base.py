@@ -8,6 +8,7 @@ against a concrete mesh at sharding-rule construction time
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import math
 from typing import Sequence
@@ -104,6 +105,13 @@ class ModelConfig:
     def mlstm_inner(self) -> int:
         return self.mlstm_expand * self.d_model
 
+    def block_counts(self) -> dict[str, int]:
+        """Occurrences of each block kind in ``block_pattern`` — the layer
+        census ``param_count`` sums over and the serving footprint model
+        (``repro.serving.footprint``) charges per-kind decode state
+        against."""
+        return dict(collections.Counter(self.block_pattern))
+
     def param_count(self) -> int:
         """Approximate parameter count (used for MODEL_FLOPS = 6 N D)."""
         d, hd = self.d_model, self.head_dim
@@ -111,8 +119,7 @@ class ModelConfig:
         if not self.tie_embeddings:
             n += self.padded_vocab * d
         shared = 0
-        for kind in set(self.block_pattern):
-            cnt = sum(1 for k in self.block_pattern if k == kind)
+        for kind, cnt in self.block_counts().items():
             if kind in ("attn", "shared_attn"):
                 per = (d * self.n_heads * hd + 2 * d * self.n_kv_heads * hd
                        + self.n_heads * hd * d)

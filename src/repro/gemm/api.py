@@ -147,10 +147,22 @@ class GemmPlan:
                 force: bool = False):
         """Run ``C (+)= A.B`` with this plan's selection.
 
-        Dispatches to the Pallas kernels (``pallas``) or the pure-jnp
-        reference (``reference``); analytic-only backends raise
-        :class:`NotExecutableError`.  ``force`` makes the pallas backend
-        attempt real (non-interpret) Pallas lowering even off-TPU.
+        Args:
+            a / b / c: operands matching the planned problem's shapes
+                (``c`` only for accumulate semantics).
+            interpret: run the Pallas kernel in interpret mode (works
+                off-TPU).
+            force: attempt real (non-interpret) Pallas lowering even
+                off-TPU.
+
+        Returns:
+            The product array, computed by the Pallas kernels (``pallas``)
+            or the pure-jnp reference (``reference``).
+
+        Raises:
+            NotExecutableError: on analytic-only backends.
+            ValueError: when operand shapes do not match the planned
+                problem.
         """
         return _backend_of(self.backend).execute(self, a, b, c,
                                                  interpret=interpret,

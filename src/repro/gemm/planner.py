@@ -17,22 +17,36 @@ def plan(problem, *, backend: str = "analytic-tpu", machine=None,
          dtype: str | None = None, policy: str = "analytic",
          cache: bool = True, **options) -> GemmPlan:
     """Plan one GEMM: run ``backend``'s analytic model / search and freeze
-    the decision.
+    the decision.  ``plan`` is the one-problem case of :func:`plan_many`.
 
-    ``problem`` is a :class:`GemmProblem`, an ``(m, n, k)`` tuple, a
-    ``core.variants.Problem`` or a ``core.tpu_model.GemmShape``.  ``machine``
-    names a :class:`MachineSpec` (default: the backend's native target).
-    ``policy`` selects the partial-tile accounting of the GAP8 simulator
-    ("analytic" | "padded").  Backend-specific ``options``:
+    Args:
+        problem: a :class:`GemmProblem`, an ``(m, n, k)`` tuple, a
+            ``core.variants.Problem`` or a ``core.tpu_model.GemmShape``.
+        backend: backend name (see :func:`backends`).
+        machine: a registry name or :class:`MachineSpec` (default: the
+            backend's native target machine).
+        dtype: dtype tag overriding the problem's own.
+        policy: partial-tile accounting of the GAP8 simulator
+            (``"analytic"`` — exact byte ratios — or ``"padded"`` — edge
+            tiles at full-tile cost).
+        cache: consult/populate the process-wide plan cache; False forces
+            a fresh search.  A manifest warmed via :func:`warm_cache`
+            satisfies tile-backend plans without searching.
+        **options: backend-specific.  ``analytic-gap8``: ``variant=``,
+            ``micro_kernel=`` pin the search; ``analytic-tpu`` /
+            ``pallas``: ``overlap=`` picks the composition rule, ``tile=``
+            bypasses the search with an explicit TileConfig.
 
-    * ``analytic-gap8``: ``variant=``, ``micro_kernel=`` to pin the search;
-    * ``analytic-tpu`` / ``pallas``: ``overlap=`` (composition rule),
-      ``tile=`` to bypass the search with an explicit TileConfig.
+    Returns:
+        A frozen :class:`GemmPlan` carrying the chosen selection, the
+        predicted cost (``plan.estimate()`` / ``plan.predicted_seconds``)
+        and search provenance.
 
-    Decisions are memoised process-wide (``cache=False`` forces a fresh
-    search); a manifest warmed via :func:`warm_cache` satisfies tile-backend
-    plans without searching.  ``plan`` is the one-problem case of
-    :func:`plan_many`.
+    Raises:
+        UnknownBackendError: for an unregistered backend name.
+        KeyError: for an unknown machine name.
+        ValueError: for a degenerate problem, unknown dtype tag, or a
+            ``micro_kernel`` override without an explicit ``variant``.
     """
     return plan_many([problem], backend=backend, machine=machine,
                      dtype=dtype, policy=policy, cache=cache, **options)[0]
@@ -47,8 +61,19 @@ def plan_many(problems, *, backend: str = "analytic-tpu", machine=None,
     reported as ``deduped`` in :func:`plan_cache_stats`), cache and manifest
     tiers are consulted per unique problem, and the remaining misses go to
     the backend's batched ``make_plans`` engine as a single vectorized
-    lattice evaluation.  Returns one plan per input problem, in order;
-    duplicate problems share the same plan object.
+    lattice evaluation.
+
+    Args:
+        problems: iterable of anything :func:`plan`'s ``problem`` accepts.
+        backend / machine / dtype / policy / cache / **options: exactly as
+            for :func:`plan`, applied to every problem.
+
+    Returns:
+        One :class:`GemmPlan` per input problem, in input order; duplicate
+        problems share the same plan object.
+
+    Raises:
+        Everything :func:`plan` raises, for any problem of the batch.
     """
     b = get_backend(backend)
     mspec = resolve_machine(machine, b.default_machine)

@@ -88,11 +88,17 @@ def _problem_matches(row_problem: GemmProblem, query) -> bool:
 
 @dataclasses.dataclass
 class SweepResult:
-    """The full grid of planned points plus sweep-level bookkeeping."""
+    """The full grid of planned points plus sweep-level bookkeeping.
+
+    ``pruned`` records the ``(backend, machine, dtype)`` axis combinations a
+    ``feasible`` mask rejected before any planning work, each with the
+    mask's reason string.
+    """
 
     rows: list[SweepRow]
     grid: dict[str, list]
     stats: dict = dataclasses.field(default_factory=dict)
+    pruned: list[dict] = dataclasses.field(default_factory=list)
 
     def __len__(self) -> int:
         return len(self.rows)
@@ -131,6 +137,7 @@ class SweepResult:
         return {
             "grid": {k: [tag(v) for v in vs] for k, vs in self.grid.items()},
             "stats": self.stats,
+            "pruned": list(self.pruned),
             "rows": [r.as_dict() for r in self.rows],
         }
 
@@ -167,23 +174,50 @@ def sweep(problems: Iterable, *,
           policies: Sequence[str] = ("analytic",),
           variants: Sequence | None = None,
           micro_kernels: Sequence | None = None,
+          feasible=None,
           cache: bool = True,
           **options) -> SweepResult:
     """Plan every point of the problems x machines x backends x dtypes x
     policies (x variants x micro-kernels) grid as a bulk operation.
 
-    ``machines`` / ``dtypes`` entries of None mean "the backend's native
-    default".  ``machines`` entries may be registry names, raw
-    :class:`MachineSpec` objects, or glob patterns (``"zoo/*"`` expands to
-    every manifest-backed machine, ``"gap*"`` fnmatch-globs all registered
-    names).  ``variants`` / ``micro_kernels`` are GAP8-simulator axes and
-    are forwarded as the corresponding plan options (a micro-kernel axis
-    requires a variant axis, as with :func:`repro.gemm.plan`); backends
-    whose search does not consume an axis (``Backend.sweep_axes``) get one
-    grid point with that axis collapsed to None, rather than duplicate rows
-    stamped with labels that had no effect.  Each grid point is planned
-    through :func:`plan_many`, so repeated problems are deduped before
-    evaluation and every point lands in the plan cache.
+    Args:
+        problems: GEMM problems (anything :meth:`GemmProblem.coerce`
+            accepts); repeated problems are deduped before evaluation.
+        machines: machines axis; entries may be registry names, raw
+            :class:`MachineSpec` objects, or glob patterns (``"zoo/*"``
+            expands to every manifest-backed machine, ``"gap*"``
+            fnmatch-globs all registered names).  None means "the backend's
+            native default".
+        backends: backend-name axis (see ``repro.gemm.backends()``).
+        dtypes: dtype-tag axis; None means the problems' own dtypes.
+        policies: partial-tile accounting axis of the GAP8 simulator
+            (``"analytic"`` | ``"padded"``).
+        variants: GAP8-simulator loop-order axis, forwarded as the
+            ``variant`` plan option.
+        micro_kernels: GAP8-simulator micro-kernel axis (requires a variant
+            axis, as with :func:`repro.gemm.plan`).  Backends whose search
+            does not consume an axis (``Backend.sweep_axes``) get one grid
+            point with that axis collapsed to None, rather than duplicate
+            rows stamped with labels that had no effect.
+        feasible: optional feasibility mask ``feasible(machine, dtype) ->
+            bool | (bool, reason)`` evaluated once per (machine, dtype)
+            combination *before* any planning work; rejected combinations
+            produce no rows and are recorded in ``SweepResult.pruned`` (and
+            counted in ``stats["pruned"]``).  ``machine`` arrives as the
+            expanded axis entry (name, spec, or None), ``dtype`` as the axis
+            tag or None.  This is how deployment planning
+            (``repro.serving``) prunes memory-infeasible cells without
+            paying for their lattice evaluation.
+        cache: consult/populate the process-level plan cache (default True).
+        **options: forwarded to :func:`plan_many` (e.g. ``overlap=``).
+
+    Returns:
+        A :class:`SweepResult`: one :class:`SweepRow` per surviving grid
+        point, carrying the frozen plan and its cost breakdown.
+
+    Raises:
+        UnknownBackendError: for a backend name absent from the registry.
+        KeyError: for a machine name/pattern matching nothing.
     """
     from repro.gemm.registry import get_backend
 
@@ -195,34 +229,55 @@ def sweep(problems: Iterable, *,
     }
     before = plan_cache_stats()
     rows: list[SweepRow] = []
+    pruned: list[dict] = []
+    verdicts: dict[tuple, tuple[bool, str | None]] = {}
+
+    def admissible(be: str, ma, dt) -> bool:
+        if feasible is None:
+            return True
+        key = (id(ma) if isinstance(ma, MachineSpec) else ma, dt)
+        if key not in verdicts:
+            verdict = feasible(ma, dt)
+            ok, reason = verdict if isinstance(verdict, tuple) \
+                else (verdict, None)
+            verdicts[key] = (bool(ok), reason)
+        ok, reason = verdicts[key]
+        if not ok:
+            tag = ma.name if isinstance(ma, MachineSpec) else ma
+            pruned.append({"backend": be, "machine": tag, "dtype": dt,
+                           "reason": reason or "infeasible"})
+        return ok
+
     for be in grid["backends"]:
         axes = get_backend(be).sweep_axes
         vas = grid["variants"] if "variant" in axes else [None]
         mks = grid["micro_kernels"] if "micro_kernel" in axes else [None]
-        for ma, dt, po, va, mk in itertools.product(
-                grid["machines"], grid["dtypes"], grid["policies"],
-                vas, mks):
-            opts = dict(options)
-            if va is not None:
-                opts["variant"] = va
-            if mk is not None:
-                opts["micro_kernel"] = mk
-            plans = plan_many(problems, backend=be, machine=ma, dtype=dt,
-                              policy=po, cache=cache, **opts)
-            va_tag = None if va is None else str(getattr(va, "value", va))
-            mk_tag = None if mk is None else \
-                (str(mk) if not isinstance(mk, (tuple, list))
-                 else f"{mk[0]}x{mk[1]}")
-            rows.extend(SweepRow(
-                problem=p.problem, backend=be, machine=p.machine, policy=po,
-                variant=va_tag, micro_kernel=mk_tag, plan=p,
-            ) for p in plans)
+        for ma, dt in itertools.product(grid["machines"], grid["dtypes"]):
+            if not admissible(be, ma, dt):
+                continue
+            for po, va, mk in itertools.product(grid["policies"], vas, mks):
+                opts = dict(options)
+                if va is not None:
+                    opts["variant"] = va
+                if mk is not None:
+                    opts["micro_kernel"] = mk
+                plans = plan_many(problems, backend=be, machine=ma, dtype=dt,
+                                  policy=po, cache=cache, **opts)
+                va_tag = None if va is None else str(getattr(va, "value", va))
+                mk_tag = None if mk is None else \
+                    (str(mk) if not isinstance(mk, (tuple, list))
+                     else f"{mk[0]}x{mk[1]}")
+                rows.extend(SweepRow(
+                    problem=p.problem, backend=be, machine=p.machine,
+                    policy=po, variant=va_tag, micro_kernel=mk_tag, plan=p,
+                ) for p in plans)
     after = plan_cache_stats()
     stats = {
         "problems": len(problems),
         "grid_points": len(rows),
+        "pruned": len(pruned),
         "deduped": after["deduped"] - before["deduped"],
         "cache_hits": after["hits"] - before["hits"],
         "cache_misses": after["misses"] - before["misses"],
     }
-    return SweepResult(rows=rows, grid=grid, stats=stats)
+    return SweepResult(rows=rows, grid=grid, stats=stats, pruned=pruned)

@@ -22,8 +22,8 @@ from repro.serving.engine import Request, ServingEngine
 def serve_demo(arch: str, *, smoke: bool = True, n_requests: int = 8,
                max_new: int = 12, max_batch: int = 4, max_len: int = 256,
                ckpt_dir: str | None = None, seed: int = 0,
-               autoconfigure: bool = False, machine: str | None = None
-               ) -> dict:
+               autoconfigure: bool = False, machine: str | None = None,
+               memory: bool = True) -> dict:
     cfg = get_config(arch, smoke=smoke)
     lm = LM(cfg, HOST_MESH)
     values, _ = split_params(lm.init(jax.random.key(seed)))
@@ -35,16 +35,19 @@ def serve_demo(arch: str, *, smoke: bool = True, n_requests: int = 8,
             print(f"serving checkpoint step {step}")
 
     if autoconfigure:
-        # sweep the decode-batch x dtype grid and let the analytic model
-        # pick max_batch / plans (ServingEngine.autoconfigure).
+        # rank the (machine x dtype x batch) deployment grid — memory-
+        # infeasible cells pruned against each machine's budget — and let
+        # the analytic model pick machine/max_batch/plans.
         eng = ServingEngine.autoconfigure(lm, values, machine=machine,
                                           dtypes=("bf16", "int8"),
                                           batches=(1, 2, 4, 8, 16),
-                                          max_len=max_len)
+                                          max_len=max_len, memory=memory)
         ac = eng.autoconfig
+        print(eng.deployment_report.table(limit=8))
         print(f"autoconfigured: max_batch={ac['max_batch']} "
               f"dtype={ac['dtype']} machine={ac['machine']} "
-              f"({ac['predicted_tokens_per_second']:.0f} pred tok/s)")
+              f"({ac['predicted_tokens_per_second']:.0f} pred tok/s, "
+              f"{ac['memory_headroom_bytes'] / 2**30:.2f} GiB headroom)")
     else:
         eng = ServingEngine(lm, values, max_batch=max_batch, max_len=max_len)
     rng = np.random.default_rng(seed)
@@ -72,15 +75,20 @@ def main() -> None:
     ap.add_argument("--max-len", type=int, default=256)
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--autoconfigure", action="store_true",
-                    help="pick max_batch/plans by sweeping the decode-batch"
-                         " x dtype grid instead of using --max-batch")
+                    help="pick machine/max_batch/plans by ranking the "
+                         "memory-feasible (machine x dtype x batch) grid "
+                         "instead of using --max-batch")
     ap.add_argument("--machine", default=None,
                     help="machine name/glob for --autoconfigure "
-                         "(e.g. tpu-v5e, 'tpu-v5e*')")
+                         "(e.g. tpu-v5e, 'tpu-v5e*', 'zoo/*')")
+    ap.add_argument("--no-memory", action="store_true",
+                    help="autoconfigure on throughput alone, ignoring the "
+                         "deployment-memory budget")
     a = ap.parse_args()
     serve_demo(a.arch, n_requests=a.requests, max_new=a.max_new,
                max_batch=a.max_batch, max_len=a.max_len, ckpt_dir=a.ckpt_dir,
-               autoconfigure=a.autoconfigure, machine=a.machine)
+               autoconfigure=a.autoconfigure, machine=a.machine,
+               memory=not a.no_memory)
 
 
 if __name__ == "__main__":

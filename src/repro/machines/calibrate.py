@@ -323,28 +323,51 @@ class Calibrator:
             ) -> tuple[MachineSpec, FitReport]:
         """One vectorized least-squares solve over all samples.
 
-        ``date`` is required (pass None explicitly to record an undated
-        fit) — the Calibrator never invents timestamps.  For the BLIS
-        model pass per-sample ``micro_kernels`` spanning several shapes
-        (see :meth:`design_matrix`); ``per_mk_arith=True`` fits the §4
-        per-micro-kernel arithmetic table.  A column solving non-positive
-        means the measurements assign that term of the cost model no (or
-        negative) cost: ``on_nonpositive="raise"`` refuses to emit a
-        garbage spec; ``"drop"`` eliminates the offending columns
-        iteratively and keeps the template's rates for them (the term is
-        real but these samples cannot see it); ``"free"`` likewise
-        eliminates them but sets their rates to :data:`FREE_RATE` so the
-        term costs ~nothing (the right attribution for real measurements on
-        machines that overlap that traffic with compute).  Either way the
-        drop is recorded in provenance.  ``weighting="relative"`` solves
-        in units of relative error (each sample row divided by its measured
-        time) so a microsecond cell counts as much as a second cell — the
-        right loss when the goal is MAPE over a wide-dynamic-range workload;
-        ``"absolute"`` (the default) is the plain solve, exact on synthetic
-        samples.  Returns the fitted spec and the :class:`FitReport`; with
-        ``register=True`` the spec lands in the registry (source
-        ``"calibrated"``), with ``manifest_dir`` it is persisted as
-        ``<dir>/<name>.json``.
+        Args:
+            problems: measured GEMM problems (anything ``GemmProblem``
+                coerces); one per entry of ``seconds``.
+            seconds: measured wall times, aligned with ``problems``.
+            date: calibration date to record in provenance.  Required —
+                pass None *explicitly* to record an undated fit; the
+                Calibrator never invents timestamps.
+            micro_kernels: per-sample micro-kernels (BLIS model).  Pass a
+                set spanning several shapes — a single-mk sample set is
+                provably rank-deficient (see :meth:`design_matrix`).
+            name: name for the fitted spec (default: template name).
+            register: land the fitted spec in the registry (source
+                ``"calibrated"``).
+            manifest_dir: also persist the spec as ``<dir>/<name>.json``.
+            per_mk_arith: fit the paper-§4 per-micro-kernel arithmetic
+                table instead of one rate per dtype.
+            on_nonpositive: what to do when a column solves non-positive
+                (the measurements assign that cost-model term no, or
+                negative, cost).  ``"raise"`` refuses to emit a garbage
+                spec; ``"drop"`` eliminates offending columns iteratively
+                and keeps the template's rates for them (the term is real
+                but these samples cannot see it); ``"free"`` likewise
+                eliminates them but sets their rates to :data:`FREE_RATE`
+                so the term costs ~nothing (the right attribution for
+                machines that overlap that traffic with compute).  Either
+                way the drop is recorded in provenance.
+            weighting: ``"absolute"`` (default) solves plainly — exact on
+                synthetic samples; ``"relative"`` solves in units of
+                relative error (each row divided by its measured time) so
+                a microsecond cell counts as much as a second cell — the
+                right loss when the goal is MAPE over a wide-dynamic-range
+                workload.
+            extra_provenance: merged into the fitted spec's provenance.
+
+        Returns:
+            ``(fitted_spec, fit_report)`` — the spec with refreshed rate
+            tables and the :class:`FitReport` recording columns, inverse
+            rates, residual RMS and drops.
+
+        Raises:
+            ValueError: mismatched problems/seconds lengths, an
+                under-determined or rank-deficient design matrix,
+                non-positive rates under ``on_nonpositive="raise"``,
+                non-positive measured times under relative weighting, or
+                an unknown ``on_nonpositive`` / ``weighting`` value.
         """
         if on_nonpositive not in ("raise", "drop", "free"):
             raise ValueError(f"on_nonpositive must be 'raise', 'drop' or "

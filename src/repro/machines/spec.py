@@ -87,6 +87,12 @@ class MachineSpec:
     levels: tuple[str, ...] = ()
     # canonical-role -> physical-level indirection (e.g. {"L2": "L1"}).
     level_aliases: Mapping[str, str] = dataclasses.field(default_factory=dict)
+    # deployment-memory view (manifest section "memory"): the level whose
+    # capacity bounds what a served model may occupy (weights + KV cache +
+    # activation workspace) and the fraction of it reserved for the runtime.
+    # Empty deployment_level means the canonical "M" role.
+    deployment_level: str = ""
+    memory_reserved_fraction: float = 0.0
     # where this spec came from: calibration fit, derivation, manifest note.
     provenance: Mapping[str, Any] = dataclasses.field(default_factory=dict)
 
@@ -127,6 +133,29 @@ class MachineSpec:
             if rate is not None:
                 return rate
         return self.arith_rate[dtype]
+
+    def memory_budget(self, level: str | None = None) -> int:
+        """Usable bytes for a served model at the deployment memory level.
+
+        The paper treats every memory level as a hard capacity the blocked
+        algorithm must respect; deployment planning extends the same rule to
+        the whole model: weights, KV caches and activation workspace all live
+        at the deployment level (HBM on the TPU, main memory on the edge
+        parts), so a serving configuration is feasible only when its modelled
+        footprint (``repro.serving.footprint``) fits this budget.
+
+        Args:
+            level: level name or canonical role to budget; defaults to the
+                spec's ``deployment_level`` (itself defaulting to the ``"M"``
+                role).
+
+        Returns:
+            ``capacity(level)`` minus the ``memory_reserved_fraction`` slice
+            held back for the runtime (allocator slack, executables,
+            non-model buffers), as an int number of bytes.
+        """
+        lv = level or self.deployment_level or "M"
+        return int(self.capacity(lv) * (1.0 - self.memory_reserved_fraction))
 
     def fingerprint(self) -> str:
         """Content identity for process-level caches.
@@ -253,6 +282,16 @@ class MachineSpec:
                           ("num_vector_registers", 1), ("register_lanes", 1)):
             if int(getattr(self, field)) < lo:
                 raise err(f"{self.name}: {field} must be >= {lo}")
+        if self.deployment_level and \
+                self.level(self.deployment_level) not in levels:
+            raise err(f"{self.name}: deployment_level "
+                      f"{self.deployment_level!r} resolves to no declared "
+                      f"level (have {levels})")
+        frac = self.memory_reserved_fraction
+        if not (isinstance(frac, (int, float)) and math.isfinite(frac)
+                and 0.0 <= frac < 1.0):
+            raise err(f"{self.name}: memory_reserved_fraction must be in "
+                      f"[0, 1), got {frac!r}")
         return self
 
     # -- serialization -------------------------------------------------------
@@ -278,6 +317,13 @@ class MachineSpec:
                                  for tag, tab in self.arith_per_mk.items()}
         if self.level_aliases:
             d["level_aliases"] = dict(self.level_aliases)
+        if self.deployment_level or self.memory_reserved_fraction:
+            mem: dict[str, Any] = {}
+            if self.deployment_level:
+                mem["deployment_level"] = self.deployment_level
+            if self.memory_reserved_fraction:
+                mem["reserved_fraction"] = float(self.memory_reserved_fraction)
+            d["memory"] = mem
         if self.provenance:
             d["provenance"] = dict(self.provenance)
         return d
@@ -314,6 +360,10 @@ class MachineSpec:
                 register_lanes=int(d.get("register_lanes", 4)),
                 levels=tuple(d.get("levels") or ()),
                 level_aliases=dict(d.get("level_aliases") or {}),
+                deployment_level=str(
+                    dict(d.get("memory") or {}).get("deployment_level", "")),
+                memory_reserved_fraction=float(
+                    dict(d.get("memory") or {}).get("reserved_fraction", 0.0)),
                 provenance=dict(d.get("provenance") or {}),
             )
         except (KeyError, TypeError, ValueError) as e:
@@ -390,3 +440,17 @@ class MachineSpec:
                    if dt not in rates}
         return self._derive(name, "+dtypes", {"with_dtype_rates": dict(rates)},
                             arith_rate=merged, arith_per_mk=kept_mk)
+
+    def with_memory(self, name: str | None = None, *,
+                    deployment_level: str | None = None,
+                    reserved_fraction: float | None = None) -> "MachineSpec":
+        """Override the deployment-memory view (see :meth:`memory_budget`),
+        e.g. ``spec.with_memory(reserved_fraction=0.2)`` for a what-if with a
+        fifth of the deployment level held back from serving."""
+        changes: dict[str, Any] = {}
+        if deployment_level is not None:
+            changes["deployment_level"] = deployment_level
+        if reserved_fraction is not None:
+            changes["memory_reserved_fraction"] = float(reserved_fraction)
+        return self._derive(name, "+mem", {"with_memory": dict(changes)},
+                            **changes).validate()

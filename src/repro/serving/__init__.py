@@ -1,1 +1,47 @@
-"""repro.serving subpackage."""
+"""``repro.serving`` — continuous batching + memory-aware deployment
+planning.
+
+* :class:`ServingEngine` / :class:`Request` — the slot-based
+  continuous-batching engine (``engine.py``).
+* :func:`footprint` / :class:`Footprint` — the closed-form serving
+  memory model: weights + KV/recurrent state + activation workspace per
+  ``(model config, batch, dtype)`` (``footprint.py``).
+* :func:`plan_deployment` / :class:`DeploymentReport` — rank every
+  feasible ``(machine, dtype, batch)`` cell of the zoo by predicted decode
+  throughput, pruning memory-infeasible cells before the GEMM sweep
+  (``report.py``); ``ServingEngine.autoconfigure`` freezes an engine from
+  the winning cell, and ``python -m repro.serving plan`` prints the report
+  without instantiating a model.
+
+The engine and report modules import jax (and, for the engine, the model
+zoo); they load lazily so the config-only analytic surfaces
+(``footprint``, the ``python -m repro.serving`` CLI startup) stay light.
+"""
+import importlib
+
+from repro.serving.footprint import Footprint, dtype_bytes, footprint
+
+_LAZY = {
+    "Request": "repro.serving.engine",
+    "ServingEngine": "repro.serving.engine",
+    "CellRejection": "repro.serving.report",
+    "DeploymentOption": "repro.serving.report",
+    "DeploymentReport": "repro.serving.report",
+    "plan_deployment": "repro.serving.report",
+}
+
+__all__ = [
+    "CellRejection", "DeploymentOption", "DeploymentReport", "Footprint",
+    "Request", "ServingEngine", "dtype_bytes", "footprint",
+    "plan_deployment",
+]
+
+
+def __getattr__(name):
+    if name in _LAZY:
+        return getattr(importlib.import_module(_LAZY[name]), name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(set(globals()) | set(_LAZY))

@@ -78,8 +78,10 @@ class ServingEngine:
         # step's pallas plans reach the same tiles through TileTuner's
         # shared search cache.
         self._gemm_plans: list | None = None
-        # populated by autoconfigure(): the sweep-chosen operating point.
+        # populated by autoconfigure(): the sweep-chosen operating point and
+        # the full ranked DeploymentReport it was selected from.
         self.autoconfig: dict | None = None
+        self.deployment_report = None
 
     @property
     def gemm_plans(self) -> list:
@@ -96,59 +98,81 @@ class ServingEngine:
     def autoconfigure(cls, lm: LM, params, *, machine=None,
                       dtypes=("bf16",), batches=(1, 2, 4, 8, 16),
                       max_len: int = 512,
-                      backend: str = "analytic-tpu") -> "ServingEngine":
-        """Pick ``max_batch`` (and the frozen decode plans) by sweeping the
-        decode-batch x dtype (x machine) grid instead of freezing defaults.
+                      backend: str = "analytic-tpu",
+                      memory: bool = True,
+                      kv_dtype: str | None = None) -> "ServingEngine":
+        """Pick ``max_batch``, the deployment machine and the frozen decode
+        plans by ranking the whole (machine x dtype x batch) serving grid.
 
-        For every candidate batch, the model's decode GEMM shapes go
-        through ``repro.gemm.sweep`` over the given dtypes and machines
-        (names, specs, or ``"zoo/*"`` globs — see ``repro.machines``); the
-        operating point maximising predicted tokens/second wins, its sweep
-        rows become the engine's frozen ``gemm_plans``, and the whole grid
-        is kept in ``engine.autoconfig`` for ``perf_report``.
+        Wraps :func:`repro.serving.report.plan_deployment`: every cell's
+        memory footprint (weights + KV/recurrent state + activation
+        workspace, ``repro.serving.footprint``) is checked against the
+        machine's deployment-level budget and infeasible cells are pruned
+        *before* the ``repro.gemm.sweep`` plans them; among the surviving
+        cells, the one maximising predicted decode tokens/second wins —
+        ``max_batch`` is therefore the largest batch that both fits memory
+        and pays off in throughput, not the fastest-GEMM batch.
 
         The dtype axis is an analytic what-if over the machine's rate
         table; since the engine really computes in the model's configured
-        dtype, the *operating point* (and the frozen plans / headline
-        tokens-per-second) is chosen among rows of that native dtype —
-        what-if dtypes inform the recorded grid only.  If the native dtype
-        is not among ``dtypes``, the overall best row wins (an explicit
-        choice to configure against a foreign dtype).
-        """
-        from repro.core.autotune import model_gemm_shapes
-        from repro.gemm.backends import dtype_tag
+        dtype, the operating point is chosen among that native dtype's
+        feasible cells — what-if dtypes inform the ranking only.  If no
+        native-dtype cell survives, the overall best feasible cell wins (an
+        explicit choice to configure against a foreign dtype).
 
-        native = dtype_tag(lm.cfg.compute_dtype)
-        grid = []
-        for b in batches:
-            shapes = model_gemm_shapes(lm.cfg, tokens=b)
-            res = gemm_api.sweep(shapes, machines=machine,
-                                 backends=[backend], dtypes=list(dtypes))
-            by_point: dict[tuple, list] = {}
-            for r in res.rows:
-                by_point.setdefault((r.machine, r.problem.dtype),
-                                    []).append(r)
-            for (ma, dt), rows in sorted(by_point.items()):
-                step = sum(r.seconds for r in rows)
-                grid.append({
-                    "max_batch": b, "machine": ma, "dtype": dt,
-                    "predicted_gemm_seconds_per_step": step,
-                    "predicted_tokens_per_second":
-                        (b / step) if step else float("inf"),
-                    "rows": rows,
-                })
-        candidates = [g for g in grid if g["dtype"] == native] or grid
-        best = max(candidates, key=lambda g: g["predicted_tokens_per_second"])
-        eng = cls(lm, params, max_batch=best["max_batch"], max_len=max_len)
-        eng.gemm_plans = [r.plan for r in best["rows"]]
+        Args:
+            lm / params: the model the engine will serve.
+            machine: machines axis — a name, spec, glob (``"zoo/*"`` ranks
+                the whole registry), a list of any of those, or None for
+                the backend's default machine.
+            dtypes: serving-dtype what-if axis.
+            batches: candidate ``max_batch`` values.
+            max_len: per-slot cache length (bounds the KV footprint).
+            backend: planning backend for the decode-GEMM sweep.
+            memory: enforce the deployment-memory budget (default True);
+                False restores the pre-memory throughput-only grid.
+            kv_dtype: KV-cache dtype override for the footprint model.
+
+        Returns:
+            A configured engine.  ``engine.deployment_report`` holds the
+            ranked :class:`~repro.serving.report.DeploymentReport`;
+            ``engine.autoconfig`` keeps the flat JSON-friendly grid (one
+            entry per feasible cell, plus ``rejected`` cells with
+            machine-readable reasons) consumed by ``perf_report``.
+
+        Raises:
+            ValueError: when every (machine, dtype, batch) cell is memory-
+                infeasible — the error lists the per-cell rejection
+                reasons.
+        """
+        from repro.serving.report import plan_deployment
+
+        report = plan_deployment(
+            lm.cfg, machines=machine, dtypes=dtypes, batches=batches,
+            max_len=max_len, backend=backend, memory=memory,
+            kv_dtype=kv_dtype)
+        best = report.select()
+        eng = cls(lm, params, max_batch=best.batch, max_len=max_len)
+        eng.gemm_plans = [r.plan for r in best.rows]
+        eng.deployment_report = report
+        grid = [{
+            "max_batch": o.batch, "machine": o.machine, "dtype": o.dtype,
+            "predicted_gemm_seconds_per_step": o.seconds_per_step,
+            "predicted_tokens_per_second": o.tokens_per_second,
+            "footprint_bytes": o.footprint.total_bytes,
+            "memory_budget_bytes": o.budget_bytes,
+            "memory_headroom_bytes": o.headroom_bytes,
+        } for o in report.options]
         eng.autoconfig = {
-            "max_batch": best["max_batch"], "machine": best["machine"],
-            "dtype": best["dtype"], "native_dtype": native,
+            "max_batch": best.batch, "machine": best.machine,
+            "dtype": best.dtype, "native_dtype": report.native_dtype,
             "backend": backend,
-            "predicted_tokens_per_second":
-                best["predicted_tokens_per_second"],
-            "grid": [{k: v for k, v in g.items() if k != "rows"}
-                     for g in grid],
+            "predicted_tokens_per_second": best.tokens_per_second,
+            "footprint_bytes": best.footprint.total_bytes,
+            "memory_budget_bytes": best.budget_bytes,
+            "memory_headroom_bytes": best.headroom_bytes,
+            "grid": grid,
+            "rejected": [r.as_dict() for r in report.rejected],
         }
         return eng
 

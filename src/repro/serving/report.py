@@ -1,0 +1,326 @@
+"""Zoo-wide deployment planning: rank ``(machine, dtype, batch)`` cells.
+
+``plan_deployment`` turns the paper's predict-before-run loop into a
+deployment decision: for every machine of the zoo (or any glob of it) it
+crosses the serving dtype and decode-batch axes, prunes the cells whose
+modelled memory footprint (``repro.serving.footprint``) exceeds the
+machine's deployment-level budget *before* the design-space sweep plans
+them (via ``repro.gemm.sweep``'s feasibility mask), and scores the
+survivors by predicted decode throughput.  The result is a ranked
+:class:`DeploymentReport`: per-machine best configurations with memory
+headroom, plus a machine-readable rejection record for every infeasible
+cell — the planner answers "where and how should this model serve", not
+just "which GEMM is fastest".
+
+Only the model *config* is needed (no parameters are instantiated), so the
+report is cheap enough for a CLI: ``python -m repro.serving plan``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any, Sequence
+
+from repro import gemm as gemm_api
+from repro.configs.base import ModelConfig
+from repro.machines import registry as _machines
+from repro.serving.footprint import Footprint, footprint
+
+#: machine-readable rejection reasons, in the order they are diagnosed:
+#: weights alone blow the budget (no batch can ever fit), the KV/state cache
+#: pushes past it (a smaller batch may fit), or the activation workspace
+#: tips the total over.
+REJECT_WEIGHTS = "weights_exceed_budget"
+REJECT_KV_CACHE = "kv_cache_exceeds_budget"
+REJECT_FOOTPRINT = "footprint_exceeds_budget"
+
+
+@dataclasses.dataclass(frozen=True)
+class CellRejection:
+    """One infeasible ``(machine, dtype, batch)`` cell, pruned pre-sweep."""
+
+    machine: str
+    dtype: str
+    batch: int
+    reason: str             # one of the REJECT_* codes
+    footprint_bytes: int
+    budget_bytes: int
+
+    @property
+    def deficit_bytes(self) -> int:
+        """How far past the budget the modelled footprint lands."""
+        return self.footprint_bytes - self.budget_bytes
+
+    def as_dict(self) -> dict:
+        return {
+            "machine": self.machine, "dtype": self.dtype,
+            "batch": self.batch, "reason": self.reason,
+            "footprint_bytes": self.footprint_bytes,
+            "budget_bytes": self.budget_bytes,
+            "deficit_bytes": self.deficit_bytes,
+        }
+
+
+@dataclasses.dataclass(frozen=True)
+class DeploymentOption:
+    """One feasible operating point: frozen plans + memory accounting."""
+
+    machine: str
+    dtype: str
+    batch: int
+    seconds_per_step: float
+    tokens_per_second: float
+    footprint: Footprint
+    budget_bytes: int
+    rows: tuple = ()        # the sweep rows (with plans) behind this point
+
+    @property
+    def headroom_bytes(self) -> int:
+        return self.budget_bytes - self.footprint.total_bytes
+
+    @property
+    def headroom_fraction(self) -> float:
+        return self.headroom_bytes / self.budget_bytes if self.budget_bytes \
+            else 0.0
+
+    def as_dict(self) -> dict:
+        return {
+            "machine": self.machine, "dtype": self.dtype,
+            "batch": self.batch,
+            "seconds_per_step": self.seconds_per_step,
+            "tokens_per_second": self.tokens_per_second,
+            "footprint": self.footprint.as_dict(),
+            "budget_bytes": self.budget_bytes,
+            "headroom_bytes": self.headroom_bytes,
+            "headroom_fraction": self.headroom_fraction,
+        }
+
+
+def _rank_key(o: DeploymentOption):
+    # throughput first; name/dtype/batch tie-breaks keep the zoo-wide pick
+    # deterministic across runs and machine-registration orders.
+    return (-o.tokens_per_second, o.machine, o.dtype, -o.batch)
+
+
+@dataclasses.dataclass
+class DeploymentReport:
+    """Ranked feasible operating points + machine-readable rejections."""
+
+    model: str
+    backend: str
+    max_len: int
+    native_dtype: str
+    options: list[DeploymentOption]         # ranked, best first
+    rejected: list[CellRejection]
+    grid: dict = dataclasses.field(default_factory=dict)
+
+    def best(self, *, machine: str | None = None,
+             dtype: str | None = None) -> DeploymentOption:
+        """The highest-ranked option, optionally filtered by machine/dtype.
+
+        Raises:
+            ValueError: when no feasible option matches (every cell was
+                memory-pruned, or the filters exclude all survivors).
+        """
+        for o in self.options:
+            if machine is not None and o.machine != machine:
+                continue
+            if dtype is not None and o.dtype != dtype:
+                continue
+            return o
+        if self.options:
+            # feasible cells exist — the filters matched none of them, a
+            # different condition than everything being memory-pruned.
+            raise ValueError(
+                f"{len(self.options)} feasible option(s) exist for "
+                f"{self.model} but none match machine={machine!r} "
+                f"dtype={dtype!r}; feasible machines "
+                f"{sorted({o.machine for o in self.options})}, dtypes "
+                f"{sorted({o.dtype for o in self.options})}")
+        why = "; ".join(sorted({f"{r.machine}/{r.dtype}: {r.reason}"
+                                for r in self.rejected})) or "empty grid"
+        raise ValueError(
+            f"no feasible deployment for {self.model} (machine={machine}, "
+            f"dtype={dtype}); rejections: {why}")
+
+    def select(self) -> DeploymentOption:
+        """The operating point autoconfigure freezes: best among the
+        model's native-dtype options when any survive (the engine really
+        decodes in that dtype; what-if dtypes inform the ranking only),
+        otherwise best overall."""
+        try:
+            return self.best(dtype=self.native_dtype)
+        except ValueError:
+            return self.best()
+
+    def per_machine_best(self) -> dict[str, DeploymentOption]:
+        """Best option per machine, in rank order (dict preserves it)."""
+        out: dict[str, DeploymentOption] = {}
+        for o in self.options:
+            out.setdefault(o.machine, o)
+        return out
+
+    def rejections_for(self, machine: str | None = None,
+                       batch: int | None = None) -> list[CellRejection]:
+        """Rejected cells, optionally filtered by machine and/or batch."""
+        return [r for r in self.rejected
+                if (machine is None or r.machine == machine)
+                and (batch is None or r.batch == batch)]
+
+    def table(self, limit: int | None = None) -> str:
+        """Human-readable ranked table (options, then rejection summary)."""
+        gib = 1024.0 ** 3
+        lines = ["rank machine            dtype batch  tok/s      "
+                 "footprint   headroom"]
+        for i, o in enumerate(self.options[:limit], 1):
+            lines.append(
+                f"{i:<4} {o.machine:<18} {o.dtype:<5} {o.batch:<6}"
+                f"{o.tokens_per_second:<10.3g} "
+                f"{o.footprint.total_bytes / gib:>8.3f}Gi "
+                f"{o.headroom_fraction:>7.1%}")
+        if limit is not None and len(self.options) > limit:
+            lines.append(f"... ({len(self.options) - limit} more options)")
+        if self.rejected:
+            by_reason: dict[str, int] = {}
+            for r in self.rejected:
+                by_reason[r.reason] = by_reason.get(r.reason, 0) + 1
+            lines.append(f"rejected {len(self.rejected)} cells: " + ", ".join(
+                f"{n}x {reason}" for reason, n in sorted(by_reason.items())))
+        return "\n".join(lines)
+
+    def to_json(self) -> dict:
+        return {
+            "model": self.model, "backend": self.backend,
+            "max_len": self.max_len, "native_dtype": self.native_dtype,
+            "grid": dict(self.grid),
+            "options": [o.as_dict() for o in self.options],
+            "rejected": [r.as_dict() for r in self.rejected],
+        }
+
+    def save(self, path: str) -> str:
+        with open(path, "w") as f:
+            json.dump(self.to_json(), f, indent=1)
+            f.write("\n")
+        return path
+
+
+def diagnose_rejection(fp: Footprint, budget: int) -> str:
+    """The REJECT_* code for an over-budget footprint (weights alone, then
+    weights+KV, then the full total — the first component that breaks)."""
+    if fp.weights_bytes > budget:
+        return REJECT_WEIGHTS
+    if fp.weights_bytes + fp.kv_cache_bytes > budget:
+        return REJECT_KV_CACHE
+    return REJECT_FOOTPRINT
+
+
+def plan_deployment(cfg: ModelConfig, *,
+                    machines=None,
+                    dtypes: Sequence[str] = ("bf16",),
+                    batches: Sequence[int] = (1, 2, 4, 8, 16),
+                    max_len: int = 512,
+                    backend: str = "analytic-tpu",
+                    memory: bool = True,
+                    kv_dtype: str | None = None) -> DeploymentReport:
+    """Rank every feasible ``(machine, dtype, batch)`` serving cell.
+
+    Args:
+        cfg: model config; only shape fields are read (no params built).
+        machines: machines axis — names, specs, globs (``"zoo/*"`` sweeps
+            the whole registry), a list of any of those, or None for the
+            backend's native default machine.
+        dtypes: serving-dtype axis (weights/activations; the KV dtype
+            follows ``kv_dtype``).
+        batches: candidate decode-slot counts (``max_batch`` values).
+        max_len: per-slot cache length the KV footprint is charged at.
+        backend: planning backend for the decode-GEMM sweep.
+        memory: enforce the deployment-memory budget (True, the default)
+            or score every cell unconstrained (False — the pre-PR
+            throughput-only behaviour, kept for what-ifs and tests).
+        kv_dtype: KV-cache dtype override, forwarded to
+            :func:`repro.serving.footprint.footprint`.
+
+    Returns:
+        A :class:`DeploymentReport` with options ranked by predicted decode
+        tokens/second (deterministic tie-breaks) and one
+        :class:`CellRejection` per memory-pruned cell.  Every option's
+        footprint fits its machine's ``memory_budget()`` by construction.
+
+    Raises:
+        KeyError: unknown machine name or pattern matching nothing.
+        ValueError: empty dtype/batch axes.
+    """
+    from repro.core.autotune import model_gemm_shapes
+    from repro.gemm.backends import dtype_tag
+    from repro.gemm.registry import get_backend
+
+    dtypes = list(dtypes)
+    batches = sorted(set(int(b) for b in batches))
+    if not dtypes or not batches:
+        raise ValueError("plan_deployment needs non-empty dtypes and "
+                         "batches axes")
+    native = dtype_tag(cfg.compute_dtype)
+    default_machine = get_backend(backend).default_machine
+    # expand_many canonicalizes names/globs; MachineSpec entries (possibly
+    # unregistered derived machines) pass through and are keyed by name.
+    default_name = _machines.resolve(None, default_machine).name
+
+    def tag_of(entry) -> str:
+        if isinstance(entry, _machines.MachineSpec):
+            return entry.name
+        return default_name if entry is None else entry
+
+    # overlapping globs/names (machines=["zoo/*", "tpu-v5e"]) must not plan
+    # a machine twice — duplicate rows would double-count seconds_per_step
+    # in the by_point merge below.  First occurrence wins.
+    entries, seen = [], set()
+    for e in _machines.expand_many(machines):
+        if tag_of(e) not in seen:
+            seen.add(tag_of(e))
+            entries.append(e)
+
+    budgets = {tag_of(e): _machines.resolve(e, default_machine)
+               .memory_budget() for e in entries}
+
+    options: list[DeploymentOption] = []
+    rejected: list[CellRejection] = []
+    for batch in batches:
+        shapes = model_gemm_shapes(cfg, tokens=batch)
+        fps = {dt: footprint(cfg, batch=batch, max_len=max_len, dtype=dt,
+                             kv_dtype=kv_dtype) for dt in dtypes}
+
+        def mask(ma, dt, _batch=batch, _fps=fps):
+            fp = _fps[dt]
+            budget = budgets[tag_of(ma)]
+            if fp.fits(budget):
+                return True
+            return (False, diagnose_rejection(fp, budget))
+
+        res = gemm_api.sweep(shapes, machines=entries, backends=[backend],
+                             dtypes=dtypes,
+                             feasible=mask if memory else None)
+        for pr in res.pruned:
+            fp = fps[pr["dtype"]]
+            rejected.append(CellRejection(
+                machine=tag_of(pr["machine"]), dtype=pr["dtype"],
+                batch=batch, reason=pr["reason"],
+                footprint_bytes=fp.total_bytes,
+                budget_bytes=budgets[tag_of(pr["machine"])]))
+        by_point: dict[tuple, list] = {}
+        for r in res.rows:
+            by_point.setdefault((r.machine, r.problem.dtype), []).append(r)
+        for (ma, dt), rows in sorted(by_point.items()):
+            step = sum(r.seconds for r in rows)
+            options.append(DeploymentOption(
+                machine=ma, dtype=dt, batch=batch,
+                seconds_per_step=step,
+                tokens_per_second=(batch / step) if step else float("inf"),
+                footprint=fps[dt], budget_bytes=budgets[ma],
+                rows=tuple(rows)))
+    options.sort(key=_rank_key)
+    return DeploymentReport(
+        model=cfg.name, backend=backend, max_len=max_len,
+        native_dtype=native, options=options, rejected=rejected,
+        grid={"machines": sorted(budgets), "dtypes": dtypes,
+              "batches": batches, "memory": memory},
+    )

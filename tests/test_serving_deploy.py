@@ -1,0 +1,295 @@
+"""Memory-aware deployment planning: footprint model, feasibility pruning,
+zoo-wide ranking, and the autoconfigure contract.
+
+The acceptance properties of the memory-aware planner:
+
+* no selected configuration's modelled footprint exceeds its machine's
+  deployment-level budget;
+* the batch is capped by the memory constraint *alone* (same grid without
+  the constraint picks a larger batch);
+* the zoo-wide pick is deterministic;
+* infeasible cells carry machine-readable rejection reasons;
+* legacy single-machine autoconfigure results are unchanged when memory is
+  not binding.
+"""
+import pytest
+
+from repro import machines
+from repro.configs import get_config
+from repro.serving.footprint import dtype_bytes, footprint
+from repro.serving.report import (
+    REJECT_FOOTPRINT,
+    REJECT_KV_CACHE,
+    REJECT_WEIGHTS,
+    plan_deployment,
+)
+
+QWEN = "qwen2-1.5b"
+REASONS = {REJECT_WEIGHTS, REJECT_KV_CACHE, REJECT_FOOTPRINT}
+
+
+def _small_memory_machine(cfg, *, fits_batch, rejects_batch, max_len,
+                          dtype="bf16", name="test-smallmem"):
+    """A tpu-v5e derivative whose deployment budget sits strictly between
+    the footprints of two batch sizes."""
+    lo = footprint(cfg, batch=fits_batch, max_len=max_len, dtype=dtype)
+    hi = footprint(cfg, batch=rejects_batch, max_len=max_len, dtype=dtype)
+    assert lo.total_bytes < hi.total_bytes
+    budget = (lo.total_bytes + hi.total_bytes) // 2
+    return (machines.get("tpu-v5e")
+            .with_memory(reserved_fraction=0.0)
+            .with_capacities(M=budget, name=name))
+
+
+# ---------------------------------------------------------------------------
+# Footprint model
+# ---------------------------------------------------------------------------
+
+
+def test_footprint_scales_with_batch_len_and_dtype():
+    cfg = get_config(QWEN, smoke=False)
+    fp1 = footprint(cfg, batch=1, max_len=512, dtype="bf16")
+    fp8 = footprint(cfg, batch=8, max_len=512, dtype="bf16")
+    # weights are batch-independent; KV cache is linear in the slot count.
+    assert fp8.weights_bytes == fp1.weights_bytes
+    assert fp8.kv_cache_bytes == 8 * fp1.kv_cache_bytes
+    # ... and linear in the cache length (qwen2 is all-attention).
+    fp_long = footprint(cfg, batch=1, max_len=1024, dtype="bf16")
+    assert fp_long.kv_cache_bytes == 2 * fp1.kv_cache_bytes
+    # serving dtype scales the weight bytes.
+    fp_int8 = footprint(cfg, batch=1, max_len=512, dtype="int8")
+    assert fp_int8.weights_bytes * dtype_bytes("bf16") == \
+        fp1.weights_bytes * dtype_bytes("int8")
+    assert fp1.total_bytes == (fp1.weights_bytes + fp1.kv_cache_bytes
+                               + fp1.activation_bytes)
+    assert fp1.fits(fp1.total_bytes) and not fp1.fits(fp1.total_bytes - 1)
+
+
+def test_footprint_covers_recurrent_and_moe_families():
+    # every serving-relevant block kind yields positive, batch-scaling state
+    for arch in ("zamba2-1.2b", "xlstm-125m", "granite-moe-3b-a800m"):
+        cfg = get_config(arch, smoke=True)
+        fp1 = footprint(cfg, batch=1, max_len=128)
+        fp4 = footprint(cfg, batch=4, max_len=128)
+        assert fp1.kv_cache_bytes > 0
+        assert fp4.kv_cache_bytes == 4 * fp1.kv_cache_bytes
+
+
+def test_footprint_honours_int8_kv_cache_config():
+    import dataclasses
+    cfg = get_config(QWEN, smoke=False)
+    cfg8 = dataclasses.replace(cfg, kv_cache_dtype="int8")
+    fp = footprint(cfg8, batch=2, max_len=512, dtype="bf16")
+    assert fp.kv_dtype == "int8"
+    # int8 panels + f32 scales must undercut the bf16 cache
+    assert fp.kv_cache_bytes < \
+        footprint(cfg, batch=2, max_len=512, dtype="bf16").kv_cache_bytes
+    # an int8 *serving* what-if cell pays the same scale vectors the real
+    # int8 cache allocates (models/attention.py), not the cfg default's
+    fp_whatif = footprint(cfg, batch=2, max_len=512, dtype="int8")
+    assert fp_whatif.kv_dtype == "int8"
+    assert fp_whatif.kv_cache_bytes == fp.kv_cache_bytes
+
+
+def test_footprint_rejects_bad_inputs():
+    cfg = get_config(QWEN, smoke=True)
+    with pytest.raises(ValueError):
+        footprint(cfg, batch=0, max_len=512)
+    with pytest.raises(KeyError):
+        footprint(cfg, batch=1, max_len=512, dtype="fp4")
+
+
+# ---------------------------------------------------------------------------
+# Memory budget on MachineSpec
+# ---------------------------------------------------------------------------
+
+
+def test_memory_budget_and_manifest_round_trip():
+    from repro.machines.spec import MachineSpec, SpecValidationError
+
+    tpu = machines.get("tpu-v5e")
+    assert tpu.memory_budget() == int(tpu.capacity("M") * 0.95)
+    # the view follows level aliases / roles like every other accessor
+    assert tpu.memory_budget("M") == tpu.memory_budget()
+    derived = tpu.with_memory(reserved_fraction=0.5)
+    assert derived.memory_budget() == int(tpu.capacity("M") * 0.5)
+    assert derived.provenance["transform"]["with_memory"] == {
+        "memory_reserved_fraction": 0.5}
+    # memory section round-trips losslessly
+    again = MachineSpec.from_json(derived.to_json())
+    assert again.memory_reserved_fraction == 0.5
+    assert again.to_json() == derived.to_json()
+    # schema rejects nonsense
+    with pytest.raises(SpecValidationError):
+        tpu.with_memory(reserved_fraction=1.5)
+    with pytest.raises(SpecValidationError):
+        tpu.with_memory(deployment_level="L9")
+
+
+# ---------------------------------------------------------------------------
+# Sweep feasibility mask
+# ---------------------------------------------------------------------------
+
+
+def test_sweep_feasibility_mask_prunes_before_planning():
+    from repro import gemm
+
+    calls = []
+
+    def mask(ma, dt):
+        calls.append((ma, dt))
+        return (dt != "int8", "int8 banned for test")
+
+    res = gemm.sweep([(64, 64, 64), (64, 64, 64)], dtypes=["bf16", "int8"],
+                     feasible=mask)
+    assert {r.problem.dtype for r in res.rows} == {"bf16"}
+    assert res.stats["pruned"] == 1 and len(res.pruned) == 1
+    assert res.pruned[0]["reason"] == "int8 banned for test"
+    assert res.pruned[0]["dtype"] == "int8"
+    # the mask is consulted once per (machine, dtype), not per grid point
+    assert len(calls) == 2
+    assert "pruned" in res.to_json()
+
+
+# ---------------------------------------------------------------------------
+# plan_deployment: the memory constraint alone caps the batch
+# ---------------------------------------------------------------------------
+
+
+def test_batch_capped_by_kv_cache_capacity_alone():
+    cfg = get_config(QWEN, smoke=False)
+    max_len = 1024
+    spec = _small_memory_machine(cfg, fits_batch=4, rejects_batch=8,
+                                 max_len=max_len, name="test-kvcap")
+    kwargs = dict(machines=spec, dtypes=("bf16",), batches=(1, 2, 4, 8, 16),
+                  max_len=max_len)
+    constrained = plan_deployment(cfg, **kwargs)
+    free = plan_deployment(cfg, memory=False, **kwargs)
+    # throughput alone wants the largest batch ...
+    assert free.select().batch == 16 and not free.rejected
+    # ... memory alone caps it at the largest batch that fits
+    assert constrained.select().batch == 4
+    # every surviving option's footprint fits the deployment budget
+    assert constrained.options
+    for o in constrained.options:
+        assert o.footprint.total_bytes <= o.budget_bytes
+        assert o.headroom_bytes >= 0
+    # the over-budget batches were rejected before planning, for the KV
+    # cache specifically (weights alone fit)
+    rejected_batches = {r.batch for r in constrained.rejected}
+    assert rejected_batches == {8, 16}
+    for r in constrained.rejected:
+        assert r.reason == REJECT_KV_CACHE
+        assert r.deficit_bytes > 0
+        d = r.as_dict()
+        assert {"machine", "dtype", "batch", "reason", "footprint_bytes",
+                "budget_bytes", "deficit_bytes"} <= set(d)
+
+
+def test_weights_rejection_is_distinguished():
+    cfg = get_config(QWEN, smoke=False)
+    tiny = (machines.get("tpu-v5e")
+            .with_memory(reserved_fraction=0.0)
+            .with_capacities(M=10 * 2**20, name="test-tinymem"))
+    report = plan_deployment(cfg, machines=tiny, dtypes=("bf16",),
+                             batches=(1, 2), max_len=256)
+    assert not report.options
+    assert report.rejected and \
+        all(r.reason == REJECT_WEIGHTS for r in report.rejected)
+    with pytest.raises(ValueError, match="no feasible deployment"):
+        report.best()
+
+
+# ---------------------------------------------------------------------------
+# Zoo-wide ranking
+# ---------------------------------------------------------------------------
+
+
+def test_zoo_wide_pick_is_deterministic_and_ranked():
+    cfg = get_config(QWEN, smoke=True)
+    kwargs = dict(machines="zoo/*", dtypes=("bf16", "int8"),
+                  batches=(1, 4), max_len=64)
+    a = plan_deployment(cfg, **kwargs)
+    b = plan_deployment(cfg, **kwargs)
+    key = lambda o: (o.machine, o.dtype, o.batch)  # noqa: E731
+    assert [key(o) for o in a.options] == [key(o) for o in b.options]
+    assert key(a.select()) == key(b.select())
+    # ranked: non-increasing predicted throughput
+    tps = [o.tokens_per_second for o in a.options]
+    assert tps == sorted(tps, reverse=True)
+    # the grid really spanned the registry's manifests
+    assert set(a.grid["machines"]) == set(machines.list_machines("zoo/*"))
+    # per-machine view preserves rank order and covers only feasible ones
+    pm = a.per_machine_best()
+    assert list(pm) == [m for m in dict.fromkeys(o.machine
+                                                 for o in a.options)]
+    # reasons (if any cell was pruned) are machine-readable codes
+    assert {r.reason for r in a.rejected} <= REASONS
+    # report serializes
+    j = a.to_json()
+    assert j["options"] and j["model"] == cfg.name
+    assert a.table(limit=3)
+
+
+# ---------------------------------------------------------------------------
+# Engine-level autoconfigure
+# ---------------------------------------------------------------------------
+
+
+def _smoke_lm():
+    import jax
+    from repro.models.common import HOST_MESH, split_params
+    from repro.models.model import LM
+
+    cfg = get_config(QWEN, smoke=True)
+    lm = LM(cfg, HOST_MESH)
+    values, _ = split_params(lm.init(jax.random.key(0)))
+    return lm, values
+
+
+def test_autoconfigure_batch_reduced_by_memory_constraint():
+    from repro.serving.engine import Request, ServingEngine
+
+    lm, values = _smoke_lm()
+    max_len = 64
+    spec = _small_memory_machine(lm.cfg, fits_batch=1, rejects_batch=4,
+                                 max_len=max_len, name="test-engine-mem")
+    free = ServingEngine.autoconfigure(lm, values, machine=spec,
+                                       dtypes=("bf16",), batches=(1, 4),
+                                       max_len=max_len, memory=False)
+    eng = ServingEngine.autoconfigure(lm, values, machine=spec,
+                                      dtypes=("bf16",), batches=(1, 4),
+                                      max_len=max_len)
+    # the memory constraint alone reduced the chosen batch
+    assert free.max_batch == 4
+    assert eng.max_batch == 1
+    ac = eng.autoconfig
+    assert ac["max_batch"] == 1 and ac["memory_headroom_bytes"] >= 0
+    assert [r["reason"] for r in ac["rejected"]] == [REJECT_KV_CACHE]
+    # the ranked report rides on the engine, selection consistent with it
+    rep = eng.deployment_report
+    assert rep.select().batch == 1
+    assert all(o.footprint.total_bytes <= o.budget_bytes
+               for o in rep.options)
+    # the constrained engine still serves
+    eng.submit(Request(rid=0, prompt=[3, 1, 4], max_new_tokens=3))
+    done = eng.run_until_drained()
+    assert len(done) == 1 and len(done[0].generated) == 3
+
+
+def test_autoconfigure_unchanged_when_memory_not_binding():
+    from repro.serving.engine import ServingEngine
+
+    lm, values = _smoke_lm()
+    kwargs = dict(dtypes=("bf16", "int8"), batches=(1, 4), max_len=64)
+    eng = ServingEngine.autoconfigure(lm, values, **kwargs)
+    legacy = ServingEngine.autoconfigure(lm, values, memory=False, **kwargs)
+    # smoke model vs 16 GB HBM: nothing is pruned, and the pick matches the
+    # legacy throughput-only grid exactly
+    assert eng.autoconfig["rejected"] == []
+    for key in ("max_batch", "machine", "dtype",
+                "predicted_tokens_per_second"):
+        assert eng.autoconfig[key] == legacy.autoconfig[key]
+    assert eng.max_batch == legacy.max_batch
+    assert [p.describe() for p in eng.gemm_plans] == \
+        [p.describe() for p in legacy.gemm_plans]

@@ -1,0 +1,125 @@
+#!/usr/bin/env python
+"""Docs checker: run the Python snippets in docs/*.md + README.md and
+verify intra-repo links.
+
+    PYTHONPATH=src python tools/check_docs.py [FILES...]
+
+Every fenced ```python block is executed (blocks within one file share a
+namespace, in order, so later snippets may build on earlier ones); a block
+whose first line contains ``docs-check: skip`` is not run.  This is what
+keeps the worked examples in docs/COST_MODELS.md et al. from drifting away
+from the code — if the simulator's number changes, the doc's assert fails
+CI.
+
+Relative markdown links (``[text](path)``) must point at files that exist;
+http(s)/mailto links and pure #anchors are not checked.
+"""
+from __future__ import annotations
+
+import glob
+import os
+import re
+import sys
+import traceback
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SKIP_MARK = "docs-check: skip"
+# any ``` line toggles a fence; the opener's info string starts with the
+# language word ("python", "python title=x", ...)
+_FENCE = re.compile(r"^```(.*)$")
+_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+
+
+def default_files() -> list[str]:
+    files = [os.path.join(ROOT, "README.md")]
+    files += sorted(glob.glob(os.path.join(ROOT, "docs", "*.md")))
+    return [f for f in files if os.path.exists(f)]
+
+
+def python_blocks(text: str) -> list[tuple[int, str]]:
+    """(start_line, source) for every fenced python block.
+
+    Raises:
+        ValueError: on an unterminated fence — a dangling ```python block
+        would otherwise be silently skipped, which is exactly the drift
+        this checker exists to catch.
+    """
+    blocks, buf, start, lang = [], None, 0, None
+    for i, line in enumerate(text.splitlines(), 1):
+        m = _FENCE.match(line.strip())
+        if m and buf is None:
+            info = m.group(1).strip().lower()
+            lang = info.split()[0] if info else ""
+            start, buf = i + 1, []
+        elif m and buf is not None:
+            if lang == "python":
+                blocks.append((start, "\n".join(buf)))
+            buf = None
+        elif buf is not None:
+            buf.append(line)
+    if buf is not None:
+        raise ValueError(f"unterminated ``` fence opened at line {start - 1}")
+    return blocks
+
+
+def run_snippets(path: str) -> list[str]:
+    errors = []
+    with open(path) as f:
+        text = f.read()
+    namespace: dict = {"__name__": "__docs__"}
+    rel = os.path.relpath(path, ROOT)
+    try:
+        blocks = python_blocks(text)
+    except ValueError as e:
+        return [f"{rel}: {e}"]
+    for start, src in blocks:
+        first = src.splitlines()[0] if src.splitlines() else ""
+        if SKIP_MARK in first:
+            print(f"  SKIP {rel}:{start}")
+            continue
+        # pad so tracebacks report true line numbers within the md file
+        code = "\n" * (start - 1) + src
+        try:
+            exec(compile(code, rel, "exec"), namespace)     # noqa: S102
+            print(f"  ok   {rel}:{start} ({len(src.splitlines())} lines)")
+        except Exception:
+            errors.append(f"{rel}:{start}: snippet failed\n"
+                          + traceback.format_exc(limit=8))
+    return errors
+
+
+def check_links(path: str) -> list[str]:
+    errors = []
+    with open(path) as f:
+        text = f.read()
+    # drop fenced code before scanning: JSON/snippet parens are not links
+    text = re.sub(r"```.*?```", "", text, flags=re.S)
+    rel = os.path.relpath(path, ROOT)
+    for target in _LINK.findall(text):
+        if target.startswith(("http://", "https://", "mailto:", "#")):
+            continue
+        fs = os.path.normpath(
+            os.path.join(os.path.dirname(path), target.split("#", 1)[0]))
+        if not os.path.exists(fs):
+            errors.append(f"{rel}: broken link -> {target}")
+    return errors
+
+
+def main(argv: list[str]) -> int:
+    files = [os.path.abspath(a) for a in argv] or default_files()
+    failures: list[str] = []
+    for path in files:
+        print(os.path.relpath(path, ROOT))
+        failures += check_links(path)
+        failures += run_snippets(path)
+    if failures:
+        print(f"\n{len(failures)} docs-check failure(s):", file=sys.stderr)
+        for f in failures:
+            print(f"- {f}", file=sys.stderr)
+        return 1
+    print(f"\ndocs-check OK ({len(files)} files)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
