@@ -17,6 +17,9 @@ Workloads:
                per-shape ``candidate_tiles`` + ``estimate`` loop, batched =
                one deduped ``tune_batch`` lattice evaluation.
   cold_tune    single-shape planning latency (scalar loop vs 1-shape batch).
+  sim_latency  serving-simulator smoke — 2000 Poisson requests through an
+               analytically priced tpu-v5e cell (``repro.simulate``);
+               asserts a finite p99 and records events/second.
 
 ``BENCH_planner.json`` at the repo root is an **append-only perf
 trajectory**: every run appends one record keyed by the current git SHA
@@ -171,11 +174,42 @@ def bench_measure_fidelity() -> dict:
         }
 
 
+def bench_sim_latency() -> dict:
+    """Serving-simulator smoke (repro.simulate): Poisson traffic through an
+    analytically priced tpu-v5e cell.  Asserts the tail is finite (every
+    request finished) and records the event-loop throughput so simulator
+    perf regressions land in the trajectory."""
+    from repro.simulate import PoissonTraffic, ServiceModel, simulate_serving
+
+    cfg = get_config("qwen2-1.5b")
+    service = ServiceModel.from_plans(cfg, batch=8, machine="tpu-v5e")
+    traffic = PoissonTraffic(rate=500, prompt_len=(8, 200), decode_len=16,
+                             seed=0)
+
+    def run():
+        return simulate_serving(service, traffic, max_batch=8,
+                                requests=2000,
+                                config={"machine": "tpu-v5e",
+                                        "dtype": "bf16"})
+    rep, t = _best_of(run)
+    assert rep.finite, "simulated p99 latency must be finite"
+    events = rep.steps + 2 * rep.requests["submitted"]
+    return {
+        "requests": rep.requests["submitted"],
+        "steps": rep.steps,
+        "wall_s": t,
+        "events_per_s": events / t,
+        "p99_latency_s": rep.latency["p99"],
+        "goodput_tps": rep.goodput_tps,
+    }
+
+
 def main() -> None:
     table2 = bench_table2_gap8()
     allarch = bench_allarch_tpu()
     cold = bench_cold_tune()
     fidelity = bench_measure_fidelity()
+    sim = bench_sim_latency()
     combined_scalar = table2["scalar_s"] + allarch["scalar_s"]
     combined_batched = table2["batched_s"] + allarch["batched_s"]
     report = {
@@ -183,6 +217,7 @@ def main() -> None:
             "table2_gap8": table2,
             "allarch_tpu": allarch,
             "cold_tune": cold,
+            "sim_latency": sim,
         },
         "measure_fidelity": fidelity,
         "combined": {
@@ -204,7 +239,8 @@ def main() -> None:
     print(json.dumps(report, indent=1, sort_keys=True))
     print(f"\ncombined Table-2 + all-arch speedup: "
           f"{report['combined']['speedup']:.1f}x; smoke-campaign host MAPE "
-          f"{fidelity['mape_pct']:.1f}% "
+          f"{fidelity['mape_pct']:.1f}%; sim {sim['events_per_s']:,.0f} "
+          f"events/s "
           f"(record {sha[:12]} appended to {os.path.abspath(OUT_PATH)}; "
           f"{len(trajectory['records'])} records in trajectory)")
 

@@ -3,12 +3,19 @@
     PYTHONPATH=src python examples/serve_batch.py --arch zamba2-1.2b
     PYTHONPATH=src python examples/serve_batch.py --autoconfigure \\
         --machine 'zoo/*'       # memory-aware zoo-wide machine/batch pick
+    PYTHONPATH=src python examples/serve_batch.py --autoconfigure \\
+        --machine gap9-fc --slo-p99 0.35 --rate 5 \\
+        --trace /tmp/trace.json # simulation-backed SLO pick + event trace
 
 With ``--autoconfigure`` the engine comes from the ranked deployment grid
 (``repro.serving.plan_deployment``): cells whose modelled footprint
 (weights + KV cache + workspace) exceeds a machine's deployment-memory
 budget are pruned before the GEMM sweep, and the surviving cell with the
-best predicted decode throughput is frozen into the engine.
+best predicted decode throughput is frozen into the engine.  Adding
+``--slo-p99`` instead picks the cell by *simulated* SLO attainment under
+Poisson traffic (``repro.simulate``) — usually a smaller batch than the
+peak-throughput winner.  ``--trace`` writes the engine's event trace for
+``python -m repro.simulate replay`` sim-vs-real validation.
 """
 import argparse
 import os
@@ -28,10 +35,21 @@ def main() -> None:
     ap.add_argument("--autoconfigure", action="store_true")
     ap.add_argument("--machine", default=None)
     ap.add_argument("--no-memory", action="store_true")
+    ap.add_argument("--slo-p99", type=float, default=None)
+    ap.add_argument("--rate", type=float, default=None)
+    ap.add_argument("--trace", default=None)
     a = ap.parse_args()
+    slo = traffic = None
+    if a.slo_p99 is not None:
+        from repro.simulate import SLO, PoissonTraffic
+        slo = SLO(p99_latency_s=a.slo_p99)
+        if a.rate is not None:
+            traffic = PoissonTraffic(rate=a.rate, prompt_len=16,
+                                     decode_len=a.max_new)
     serve_demo(a.arch, n_requests=a.requests, max_new=a.max_new,
                max_batch=a.max_batch, autoconfigure=a.autoconfigure,
-               machine=a.machine, memory=not a.no_memory)
+               machine=a.machine, memory=not a.no_memory, slo=slo,
+               traffic=traffic, trace_path=a.trace)
 
 
 if __name__ == "__main__":

@@ -41,6 +41,7 @@ class SweepRow:
     variant: str | None
     micro_kernel: str | None
     plan: GemmPlan
+    scenario: str | None = None
 
     @property
     def selection(self) -> Any:
@@ -67,6 +68,7 @@ class SweepRow:
             "backend": self.backend, "machine": self.machine,
             "policy": self.policy, "variant": self.variant,
             "micro_kernel": self.micro_kernel,
+            "scenario": self.scenario,
             "selection": str(self.selection), "seconds": self.seconds,
             "breakdown": self.breakdown(),
         }
@@ -133,7 +135,10 @@ class SweepResult:
 
     def to_json(self) -> dict:
         def tag(v):
-            return v.name if isinstance(v, MachineSpec) else str(v)
+            if isinstance(v, MachineSpec):
+                return v.name
+            name = getattr(v, "name", None)
+            return name if isinstance(name, str) else str(v)
         return {
             "grid": {k: [tag(v) for v in vs] for k, vs in self.grid.items()},
             "stats": self.stats,
@@ -174,6 +179,7 @@ def sweep(problems: Iterable, *,
           policies: Sequence[str] = ("analytic",),
           variants: Sequence | None = None,
           micro_kernels: Sequence | None = None,
+          scenarios: Sequence | None = None,
           feasible=None,
           cache: bool = True,
           **options) -> SweepResult:
@@ -199,6 +205,15 @@ def sweep(problems: Iterable, *,
             does not consume an axis (``Backend.sweep_axes``) get one grid
             point with that axis collapsed to None, rather than duplicate
             rows stamped with labels that had no effect.
+        scenarios: workload-scenario axis.  Each entry is a label whose
+            ``name`` attribute (or ``str()``) tags the rows it produced, and
+            whose optional ``problems(base)`` hook maps the base problem
+            list to the scenario's own — e.g. a
+            :class:`repro.simulate.traffic.TrafficScenario` bound via
+            ``.bind(cfg, max_len)`` appends the prefill-bucket GEMMs its
+            prompt-length distribution can hit, so one sweep plans every
+            shape a simulated serving run will price.  ``None`` (the
+            default) keeps the classic un-tagged single-scenario grid.
         feasible: optional feasibility mask ``feasible(machine, dtype) ->
             bool | (bool, reason)`` evaluated once per (machine, dtype)
             combination *before* any planning work; rejected combinations
@@ -226,6 +241,7 @@ def sweep(problems: Iterable, *,
         "backends": _axis(backends), "machines": expand_many(machines),
         "dtypes": _axis(dtypes), "policies": _axis(policies),
         "variants": _axis(variants), "micro_kernels": _axis(micro_kernels),
+        "scenarios": _axis(scenarios),
     }
     before = plan_cache_stats()
     rows: list[SweepRow] = []
@@ -248,29 +264,39 @@ def sweep(problems: Iterable, *,
                            "reason": reason or "infeasible"})
         return ok
 
-    for be in grid["backends"]:
-        axes = get_backend(be).sweep_axes
-        vas = grid["variants"] if "variant" in axes else [None]
-        mks = grid["micro_kernels"] if "micro_kernel" in axes else [None]
-        for ma, dt in itertools.product(grid["machines"], grid["dtypes"]):
-            if not admissible(be, ma, dt):
-                continue
-            for po, va, mk in itertools.product(grid["policies"], vas, mks):
-                opts = dict(options)
-                if va is not None:
-                    opts["variant"] = va
-                if mk is not None:
-                    opts["micro_kernel"] = mk
-                plans = plan_many(problems, backend=be, machine=ma, dtype=dt,
-                                  policy=po, cache=cache, **opts)
-                va_tag = None if va is None else str(getattr(va, "value", va))
-                mk_tag = None if mk is None else \
-                    (str(mk) if not isinstance(mk, (tuple, list))
-                     else f"{mk[0]}x{mk[1]}")
-                rows.extend(SweepRow(
-                    problem=p.problem, backend=be, machine=p.machine,
-                    policy=po, variant=va_tag, micro_kernel=mk_tag, plan=p,
-                ) for p in plans)
+    for sc in grid["scenarios"]:
+        sc_tag = None if sc is None else str(getattr(sc, "name", sc))
+        sc_problems = problems
+        transform = getattr(sc, "problems", None)
+        if callable(transform):
+            sc_problems = list(transform(problems))
+        for be in grid["backends"]:
+            axes = get_backend(be).sweep_axes
+            vas = grid["variants"] if "variant" in axes else [None]
+            mks = grid["micro_kernels"] if "micro_kernel" in axes else [None]
+            for ma, dt in itertools.product(grid["machines"], grid["dtypes"]):
+                if not admissible(be, ma, dt):
+                    continue
+                for po, va, mk in itertools.product(grid["policies"],
+                                                    vas, mks):
+                    opts = dict(options)
+                    if va is not None:
+                        opts["variant"] = va
+                    if mk is not None:
+                        opts["micro_kernel"] = mk
+                    plans = plan_many(sc_problems, backend=be, machine=ma,
+                                      dtype=dt, policy=po, cache=cache,
+                                      **opts)
+                    va_tag = None if va is None \
+                        else str(getattr(va, "value", va))
+                    mk_tag = None if mk is None else \
+                        (str(mk) if not isinstance(mk, (tuple, list))
+                         else f"{mk[0]}x{mk[1]}")
+                    rows.extend(SweepRow(
+                        problem=p.problem, backend=be, machine=p.machine,
+                        policy=po, variant=va_tag, micro_kernel=mk_tag,
+                        plan=p, scenario=sc_tag,
+                    ) for p in plans)
     after = plan_cache_stats()
     stats = {
         "problems": len(problems),

@@ -3,10 +3,14 @@ model.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b \\
         --requests 8 --max-new 12
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b \\
+        --autoconfigure --machine gap9-fc --slo-p99 0.35 --rate 5 \\
+        --trace /tmp/trace.json
 """
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import jax
@@ -23,7 +27,8 @@ def serve_demo(arch: str, *, smoke: bool = True, n_requests: int = 8,
                max_new: int = 12, max_batch: int = 4, max_len: int = 256,
                ckpt_dir: str | None = None, seed: int = 0,
                autoconfigure: bool = False, machine: str | None = None,
-               memory: bool = True) -> dict:
+               memory: bool = True, slo=None, traffic=None,
+               trace_path: str | None = None) -> dict:
     cfg = get_config(arch, smoke=smoke)
     lm = LM(cfg, HOST_MESH)
     values, _ = split_params(lm.init(jax.random.key(seed)))
@@ -37,17 +42,27 @@ def serve_demo(arch: str, *, smoke: bool = True, n_requests: int = 8,
     if autoconfigure:
         # rank the (machine x dtype x batch) deployment grid — memory-
         # infeasible cells pruned against each machine's budget — and let
-        # the analytic model pick machine/max_batch/plans.
+        # the analytic model pick machine/max_batch/plans.  With an SLO,
+        # the surviving cells are additionally run through the discrete-
+        # event simulator (repro.simulate) and the pick is by *simulated*
+        # SLO attainment rather than peak throughput.
         eng = ServingEngine.autoconfigure(lm, values, machine=machine,
                                           dtypes=("bf16", "int8"),
                                           batches=(1, 2, 4, 8, 16),
-                                          max_len=max_len, memory=memory)
+                                          max_len=max_len, memory=memory,
+                                          slo=slo, traffic=traffic)
         ac = eng.autoconfig
         print(eng.deployment_report.table(limit=8))
         print(f"autoconfigured: max_batch={ac['max_batch']} "
               f"dtype={ac['dtype']} machine={ac['machine']} "
               f"({ac['predicted_tokens_per_second']:.0f} pred tok/s, "
               f"{ac['memory_headroom_bytes'] / 2**30:.2f} GiB headroom)")
+        if "slo" in ac:
+            sim = ac["slo"]["sim"]
+            print(f"  SLO mode ({ac['slo']['traffic']}): simulated p99 "
+                  f"latency {sim['latency']['p99']:.4g}s, goodput "
+                  f"{sim['goodput_tps']:.4g} tok/s, "
+                  f"{len(ac['slo']['rejected'])} cell(s) rejected on slo_*")
     else:
         eng = ServingEngine(lm, values, max_batch=max_batch, max_len=max_len)
     rng = np.random.default_rng(seed)
@@ -61,8 +76,20 @@ def serve_demo(arch: str, *, smoke: bool = True, n_requests: int = 8,
     toks = sum(len(r.generated) for r in done)
     print(f"served {len(done)} requests, {toks} tokens in {dt:.2f}s "
           f"({toks / dt:.1f} tok/s)")
+    perf = eng.perf_report()
+    if "measured_requests" in perf:
+        m = perf["measured_requests"]
+        print(f"  measured: mean latency {m['latency_s']['mean']:.3f}s, "
+              f"p95 {m['latency_s']['p95']:.3f}s, mean wait "
+              f"{m['wait_s']['mean']:.3f}s")
     for r in sorted(done, key=lambda r: r.rid)[:4]:
         print(f"  req{r.rid}: prompt[:6]={r.prompt[:6]} -> {r.generated}")
+    if trace_path:
+        with open(trace_path, "w") as f:
+            json.dump(eng.trace_json(), f, indent=1, sort_keys=True)
+        print(f"wrote event trace to {trace_path} "
+              f"(replay: python -m repro.simulate replay --trace "
+              f"{trace_path})")
     return {"requests": len(done), "tokens": toks, "seconds": dt}
 
 
@@ -84,11 +111,29 @@ def main() -> None:
     ap.add_argument("--no-memory", action="store_true",
                     help="autoconfigure on throughput alone, ignoring the "
                          "deployment-memory budget")
+    ap.add_argument("--slo-p99", type=float, default=None,
+                    help="with --autoconfigure: pick by simulated SLO "
+                         "attainment under Poisson traffic instead of "
+                         "peak throughput (p99 latency bound, seconds)")
+    ap.add_argument("--rate", type=float, default=None,
+                    help="arrival rate (req/s) for the --slo-p99 traffic "
+                         "scenario; default derives one from the report")
+    ap.add_argument("--trace", default=None,
+                    help="write the engine's event trace JSON here "
+                         "(consumed by python -m repro.simulate replay)")
     a = ap.parse_args()
+    slo = traffic = None
+    if a.slo_p99 is not None:
+        from repro.simulate import SLO, PoissonTraffic
+        slo = SLO(p99_latency_s=a.slo_p99)
+        if a.rate is not None:
+            traffic = PoissonTraffic(rate=a.rate, prompt_len=16,
+                                     decode_len=a.max_new)
     serve_demo(a.arch, n_requests=a.requests, max_new=a.max_new,
                max_batch=a.max_batch, max_len=a.max_len, ckpt_dir=a.ckpt_dir,
                autoconfigure=a.autoconfigure, machine=a.machine,
-               memory=not a.no_memory)
+               memory=not a.no_memory, slo=slo, traffic=traffic,
+               trace_path=a.trace)
 
 
 if __name__ == "__main__":

@@ -19,11 +19,14 @@ zoo); they load lazily so the config-only analytic surfaces
 """
 import importlib
 
+from repro.serving.buckets import PREFILL_BUCKETS, bucket_cover, bucket_len
 from repro.serving.footprint import Footprint, dtype_bytes, footprint
 
 _LAZY = {
+    "DrainTruncatedError": "repro.serving.engine",
     "Request": "repro.serving.engine",
     "ServingEngine": "repro.serving.engine",
+    "TRACE_SCHEMA": "repro.serving.engine",
     "CellRejection": "repro.serving.report",
     "DeploymentOption": "repro.serving.report",
     "DeploymentReport": "repro.serving.report",
@@ -31,9 +34,10 @@ _LAZY = {
 }
 
 __all__ = [
-    "CellRejection", "DeploymentOption", "DeploymentReport", "Footprint",
-    "Request", "ServingEngine", "dtype_bytes", "footprint",
-    "plan_deployment",
+    "CellRejection", "DeploymentOption", "DeploymentReport",
+    "DrainTruncatedError", "Footprint", "PREFILL_BUCKETS", "Request",
+    "ServingEngine", "TRACE_SCHEMA", "bucket_cover", "bucket_len",
+    "dtype_bytes", "footprint", "plan_deployment",
 ]
 
 

@@ -15,6 +15,7 @@ from __future__ import annotations
 import collections
 import dataclasses
 import functools
+import time
 from typing import Any, Callable
 
 import jax
@@ -24,6 +25,31 @@ from repro import gemm as gemm_api
 from repro.configs.base import ModelConfig
 from repro.models.common import split_params
 from repro.models.model import LM
+from repro.serving.buckets import bucket_len as _bucket
+
+#: the event-trace format ``repro.simulate.replay`` consumes
+TRACE_SCHEMA = "repro.serving/trace-v1"
+
+
+class DrainTruncatedError(RuntimeError):
+    """``run_until_drained`` hit ``max_steps`` with work still in flight.
+
+    Raised instead of silently returning a partial result: a truncated
+    drain would otherwise masquerade as a complete trace and poison any
+    sim-vs-real replay comparison.  ``finished`` / ``queued`` / ``active``
+    carry the state at truncation.
+    """
+
+    def __init__(self, *, finished: int, queued: int, active: int,
+                 max_steps: int):
+        self.finished = finished
+        self.queued = queued
+        self.active = active
+        self.max_steps = max_steps
+        super().__init__(
+            f"run_until_drained truncated after {max_steps} steps: "
+            f"{queued} request(s) still queued, {active} still decoding "
+            f"({finished} finished) — raise max_steps or submit less work")
 
 
 @dataclasses.dataclass
@@ -33,6 +59,12 @@ class Request:
     max_new_tokens: int = 16
     eos_id: int | None = None
     generated: list = dataclasses.field(default_factory=list)
+    # lifecycle timestamps (time.perf_counter seconds), stamped by the
+    # engine: submission, slot admission, first decoded token, last token
+    t_submit: float | None = None
+    t_admit: float | None = None
+    t_first_token: float | None = None
+    t_finish: float | None = None
 
     @property
     def done(self) -> bool:
@@ -41,12 +73,33 @@ class Request:
             return True
         return len(self.generated) >= self.max_new_tokens
 
+    @property
+    def wait_s(self) -> float | None:
+        """Queue time: submit -> admission."""
+        if self.t_submit is None or self.t_admit is None:
+            return None
+        return self.t_admit - self.t_submit
 
-def _bucket(n: int, buckets=(32, 64, 128, 256, 512, 1024)) -> int:
-    for b in buckets:
-        if n <= b:
-            return b
-    return ((n + 1023) // 1024) * 1024
+    @property
+    def service_s(self) -> float | None:
+        """Admission -> last token."""
+        if self.t_admit is None or self.t_finish is None:
+            return None
+        return self.t_finish - self.t_admit
+
+    @property
+    def latency_s(self) -> float | None:
+        """End to end: submit -> last token."""
+        if self.t_submit is None or self.t_finish is None:
+            return None
+        return self.t_finish - self.t_submit
+
+    @property
+    def ttft_s(self) -> float | None:
+        """Submit -> first decoded token."""
+        if self.t_submit is None or self.t_first_token is None:
+            return None
+        return self.t_first_token - self.t_submit
 
 
 class ServingEngine:
@@ -82,6 +135,11 @@ class ServingEngine:
         # the full ranked DeploymentReport it was selected from.
         self.autoconfig: dict | None = None
         self.deployment_report = None
+        # event trace (repro.serving/trace-v1): submits, admissions, steps
+        # with wall durations, first tokens, finishes — what
+        # repro.simulate.replay re-enacts.  Cheap (a dict append per
+        # event), so always on.
+        self.trace_events: list[dict] = []
 
     @property
     def gemm_plans(self) -> list:
@@ -100,7 +158,11 @@ class ServingEngine:
                       max_len: int = 512,
                       backend: str = "analytic-tpu",
                       memory: bool = True,
-                      kv_dtype: str | None = None) -> "ServingEngine":
+                      kv_dtype: str | None = None,
+                      slo=None, traffic=None,
+                      sim_policies=("greedy",),
+                      sim_requests: int = 200,
+                      sim_seed: int = 0) -> "ServingEngine":
         """Pick ``max_batch``, the deployment machine and the frozen decode
         plans by ranking the whole (machine x dtype x batch) serving grid.
 
@@ -132,6 +194,24 @@ class ServingEngine:
             memory: enforce the deployment-memory budget (default True);
                 False restores the pre-memory throughput-only grid.
             kv_dtype: KV-cache dtype override for the footprint model.
+            slo: optional service-level objective (a
+                :class:`repro.simulate.SLO`, kwargs dict, or bare p99
+                latency bound).  When given, the memory-feasible cells are
+                additionally run through the discrete-event simulator
+                (``repro.simulate``) under ``traffic`` and the engine is
+                configured from the cell with the best *simulated* goodput
+                among those attaining the SLO — usually a smaller batch
+                than the peak-throughput pick, since every decode step
+                slows down with the slot-pool size.  SLO-failing cells
+                join ``deployment_report.rejected`` with machine-readable
+                ``slo_*`` reasons.
+            traffic: traffic scenario for SLO mode (a
+                ``repro.simulate.Traffic``); None derives a Poisson
+                scenario from the report
+                (:func:`repro.simulate.default_traffic`).
+            sim_policies / sim_requests / sim_seed: SLO-mode simulation
+                knobs — admission policies to consider, stream length per
+                cell, and the default-traffic seed.
 
         Returns:
             A configured engine.  ``engine.deployment_report`` holds the
@@ -151,7 +231,20 @@ class ServingEngine:
             lm.cfg, machines=machine, dtypes=dtypes, batches=batches,
             max_len=max_len, backend=backend, memory=memory,
             kv_dtype=kv_dtype)
-        best = report.select()
+        selection = None
+        if slo is not None:
+            from repro.machines import MachineSpec, expand_many
+            from repro.simulate import evaluate_deployment
+
+            overrides = {e.name: e for e in expand_many(machine)
+                         if isinstance(e, MachineSpec)}
+            selection = evaluate_deployment(
+                lm.cfg, report, slo=slo, traffic=traffic,
+                policies=sim_policies, requests=sim_requests,
+                seed=sim_seed, machines=overrides)
+            best = selection.option
+        else:
+            best = report.select()
         eng = cls(lm, params, max_batch=best.batch, max_len=max_len)
         eng.gemm_plans = [r.plan for r in best.rows]
         eng.deployment_report = report
@@ -174,10 +267,21 @@ class ServingEngine:
             "grid": grid,
             "rejected": [r.as_dict() for r in report.rejected],
         }
+        if selection is not None:
+            eng.autoconfig["slo"] = {
+                "slo": selection.slo.as_dict(),
+                "policy": selection.policy,
+                "traffic": selection.traffic_name,
+                "sim": selection.sim.summary(),
+                "rejected": [r.as_dict() for r in selection.rejections],
+            }
         return eng
 
     def perf_report(self) -> dict:
-        """Predicted per-decode-step GEMM cost from the frozen plans."""
+        """Predicted per-decode-step GEMM cost from the frozen plans, plus
+        measured per-request wait/service/latency stats once requests have
+        finished (the timestamps the event trace records) — the real-side
+        half of a sim-vs-real comparison."""
         total = sum(p.predicted_seconds for p in self.gemm_plans)
         report = {
             "predicted_gemm_seconds_per_step": total,
@@ -185,6 +289,21 @@ class ServingEngine:
                 (self.max_batch / total) if total else float("inf"),
             "plans": [p.describe() for p in self.gemm_plans],
         }
+        timed = [r for r in self.finished if r.latency_s is not None]
+        if timed:
+            def stats(vals):
+                vals = sorted(vals)
+                return {"mean": sum(vals) / len(vals), "max": vals[-1],
+                        "p95": vals[min(len(vals) - 1,
+                                        int(0.95 * (len(vals) - 1) + 0.5))]}
+            report["measured_requests"] = {
+                "finished": len(timed),
+                "wait_s": stats([r.wait_s for r in timed]),
+                "service_s": stats([r.service_s for r in timed]),
+                "latency_s": stats([r.latency_s for r in timed]),
+                "ttft_s": stats([r.ttft_s for r in timed
+                                 if r.ttft_s is not None] or [0.0]),
+            }
         if self.autoconfig is not None:
             report["autoconfig"] = self.autoconfig
         return report
@@ -231,12 +350,18 @@ class ServingEngine:
 
     # -- public API ---------------------------------------------------------
     def submit(self, req: Request) -> None:
+        req.t_submit = time.perf_counter()
         self.queue.append(req)
+        self.trace_events.append({
+            "type": "submit", "rid": req.rid, "t": req.t_submit,
+            "prompt_len": len(req.prompt),
+            "max_new_tokens": req.max_new_tokens})
 
     def _free_slots(self) -> list[int]:
         return [i for i, r in enumerate(self.slot_req) if r is None]
 
-    def _admit(self) -> None:
+    def _admit(self) -> list[Request]:
+        admitted = []
         for slot in self._free_slots():
             if not self.queue:
                 break
@@ -245,6 +370,7 @@ class ServingEngine:
             # prefill all but the last prompt token; the first decode step
             # feeds prompt[-1] at position len-1 (cache then logits in one).
             prefix = ptoks[:-1]
+            bucket = 0
             if prefix:
                 # recurrent blocks fold every token into their state, so pad
                 # tokens would corrupt it: exact-length prefill for those.
@@ -259,11 +385,18 @@ class ServingEngine:
                 self.caches = self._insert(self.caches, pref, slot)
             self.slot_pos[slot] = len(ptoks) - 1
             self.slot_req[slot] = req
+            req.t_admit = time.perf_counter()
+            self.trace_events.append({
+                "type": "admit", "rid": req.rid, "t": req.t_admit,
+                "slot": slot, "prefix_len": len(prefix), "bucket": bucket})
+            admitted.append(req)
+        return admitted
 
     def step(self) -> list[Request]:
         """Admit + one decode step for all active slots; returns newly
         finished requests."""
-        self._admit()
+        t_start = time.perf_counter()
+        admitted = self._admit()
         active = [i for i, r in enumerate(self.slot_req) if r is not None]
         if not active:
             return []
@@ -279,21 +412,56 @@ class ServingEngine:
         active_mask = jnp.array([r is not None for r in self.slot_req])
         nxt, self.caches = self._decode(self.params, self.caches, tokens,
                                         pos_vec, active_mask)
-        out = []
+        out, firsts = [], []
         for i in active:
             r = self.slot_req[i]
             r.generated.append(int(nxt[i]))
+            if len(r.generated) == 1:
+                firsts.append(r)
             self.slot_pos[i] += 1
             if r.done or self.slot_pos[i] >= self.max_len - 1:
                 self.finished.append(r)
                 out.append(r)
                 self.slot_req[i] = None
                 self.slot_pos[i] = 0
+        # one stamp for the whole step: tokens materialise at the step
+        # boundary (the simulator's model of it), not per slot
+        t_end = time.perf_counter()
+        for r in firsts:
+            r.t_first_token = t_end
+            self.trace_events.append(
+                {"type": "first_token", "rid": r.rid, "t": t_end})
+        for r in out:
+            r.t_finish = t_end
+            self.trace_events.append(
+                {"type": "finish", "rid": r.rid, "t": t_end,
+                 "tokens": len(r.generated)})
+        self.trace_events.append({
+            "type": "step", "t": t_start, "dt": t_end - t_start,
+            "admitted": [r.rid for r in admitted], "active": len(active),
+            "queue_depth": len(self.queue)})
         return out
 
     def run_until_drained(self, max_steps: int = 10_000) -> list[Request]:
+        """Step until queue and slots are empty.
+
+        Raises:
+            DrainTruncatedError: when ``max_steps`` elapse with requests
+                still queued or decoding — a partial drain must not pass
+                for a complete trace (see ``repro.simulate.replay``).
+        """
         for _ in range(max_steps):
             self.step()
             if not self.queue and all(r is None for r in self.slot_req):
-                break
-        return self.finished
+                return self.finished
+        raise DrainTruncatedError(
+            finished=len(self.finished), queued=len(self.queue),
+            active=sum(r is not None for r in self.slot_req),
+            max_steps=max_steps)
+
+    def trace_json(self) -> dict:
+        """The engine's event trace (``repro.serving/trace-v1``) — feed it
+        to :func:`repro.simulate.replay.replay` for sim-vs-real
+        validation, or persist it next to a measurement campaign."""
+        return {"schema": TRACE_SCHEMA, "max_batch": self.max_batch,
+                "max_len": self.max_len, "events": list(self.trace_events)}

@@ -29,7 +29,9 @@ from repro.serving.footprint import Footprint, footprint
 #: machine-readable rejection reasons, in the order they are diagnosed:
 #: weights alone blow the budget (no batch can ever fit), the KV/state cache
 #: pushes past it (a smaller batch may fit), or the activation workspace
-#: tips the total over.
+#: tips the total over.  SLO-mode autoconfiguration appends further
+#: rejections with ``slo_*`` codes (``repro.simulate.autoconf``) — cells
+#: that fit memory but fail their simulated tail-latency/goodput targets.
 REJECT_WEIGHTS = "weights_exceed_budget"
 REJECT_KV_CACHE = "kv_cache_exceeds_budget"
 REJECT_FOOTPRINT = "footprint_exceeds_budget"
@@ -37,14 +39,17 @@ REJECT_FOOTPRINT = "footprint_exceeds_budget"
 
 @dataclasses.dataclass(frozen=True)
 class CellRejection:
-    """One infeasible ``(machine, dtype, batch)`` cell, pruned pre-sweep."""
+    """One rejected ``(machine, dtype, batch)`` cell: memory-pruned before
+    the sweep, or SLO-pruned by the simulator (``detail`` then carries the
+    observed-vs-limit numbers and the admission policy)."""
 
     machine: str
     dtype: str
     batch: int
-    reason: str             # one of the REJECT_* codes
+    reason: str             # a REJECT_* or slo_* code
     footprint_bytes: int
     budget_bytes: int
+    detail: Any = None      # optional structured context (SLO violations)
 
     @property
     def deficit_bytes(self) -> int:
@@ -52,13 +57,16 @@ class CellRejection:
         return self.footprint_bytes - self.budget_bytes
 
     def as_dict(self) -> dict:
-        return {
+        out = {
             "machine": self.machine, "dtype": self.dtype,
             "batch": self.batch, "reason": self.reason,
             "footprint_bytes": self.footprint_bytes,
             "budget_bytes": self.budget_bytes,
             "deficit_bytes": self.deficit_bytes,
         }
+        if self.detail is not None:
+            out["detail"] = self.detail
+        return out
 
 
 @dataclasses.dataclass(frozen=True)
@@ -73,6 +81,7 @@ class DeploymentOption:
     footprint: Footprint
     budget_bytes: int
     rows: tuple = ()        # the sweep rows (with plans) behind this point
+    sim: Any = None         # per-policy simulated metrics (SLO mode)
 
     @property
     def headroom_bytes(self) -> int:
@@ -84,7 +93,7 @@ class DeploymentOption:
             else 0.0
 
     def as_dict(self) -> dict:
-        return {
+        out = {
             "machine": self.machine, "dtype": self.dtype,
             "batch": self.batch,
             "seconds_per_step": self.seconds_per_step,
@@ -94,6 +103,9 @@ class DeploymentOption:
             "headroom_bytes": self.headroom_bytes,
             "headroom_fraction": self.headroom_fraction,
         }
+        if self.sim is not None:
+            out["sim"] = self.sim
+        return out
 
 
 def _rank_key(o: DeploymentOption):
@@ -113,6 +125,9 @@ class DeploymentReport:
     options: list[DeploymentOption]         # ranked, best first
     rejected: list[CellRejection]
     grid: dict = dataclasses.field(default_factory=dict)
+    # populated by SLO-mode autoconfiguration (repro.simulate.autoconf):
+    # the traffic scenario, per-cell simulated results, and the selection
+    slo: dict | None = None
 
     def best(self, *, machine: str | None = None,
              dtype: str | None = None) -> DeploymentOption:
@@ -189,13 +204,16 @@ class DeploymentReport:
         return "\n".join(lines)
 
     def to_json(self) -> dict:
-        return {
+        out = {
             "model": self.model, "backend": self.backend,
             "max_len": self.max_len, "native_dtype": self.native_dtype,
             "grid": dict(self.grid),
             "options": [o.as_dict() for o in self.options],
             "rejected": [r.as_dict() for r in self.rejected],
         }
+        if self.slo is not None:
+            out["slo"] = self.slo
+        return out
 
     def save(self, path: str) -> str:
         with open(path, "w") as f:

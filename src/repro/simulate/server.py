@@ -1,0 +1,268 @@
+"""Slot-server simulation: ``ServingEngine`` semantics on the event queue.
+
+:class:`SlotServer` mirrors the real engine step for step — a fixed pool
+of ``max_batch`` decode slots, FIFO admission from an unbounded queue,
+per-admission bucketed prefill, then one batched decode step for every
+active slot (inactive slots decode harmlessly in the real engine, so the
+decode step costs the same regardless of occupancy — the simulator charges
+the same constant).  What the real engine gets from jit-compiled kernels,
+the simulator gets from a :class:`ServiceModel`: calibrated
+``GemmPlan.estimate()`` costs for the decode-step and prefill-bucket
+workloads, so a simulated deployment is priced by exactly the analytic
+models the planner ranks with.
+
+Admission policies (the ``policy`` axis of the SLO sweep):
+
+* ``greedy`` — fill every free slot each step (the real engine's rule).
+* ``one-per-step`` — admit at most one request per step, bounding the
+  prefill work (and hence the stall) any single step can add.
+* ``drain-first`` — admit only when the whole pool is idle (batch-
+  synchronous serving, the anti-pattern continuous batching replaced;
+  kept as the baseline it is).
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import functools
+from typing import Any, Iterable, Iterator, Mapping
+
+from repro.serving.buckets import PREFILL_BUCKETS, bucket_cover, bucket_len
+from repro.simulate.engine import Simulator
+from repro.simulate.metrics import Metrics, SimReport, StepSample
+from repro.simulate.traffic import SimRequest, Traffic
+
+POLICIES = ("greedy", "one-per-step", "drain-first")
+
+
+def _workload_seconds(plans) -> float:
+    return sum(p.predicted_seconds for p in plans)
+
+
+@dataclasses.dataclass(frozen=True)
+class ServiceModel:
+    """Analytic service times for one ``(machine, dtype, batch)`` cell.
+
+    ``decode_step_s`` prices one decode step of the full slot pool;
+    ``prefill_s`` maps each jit bucket to the seconds a single-sequence
+    prefill of that length costs.  Both come from the same calibrated
+    plans the deployment report ranks with (:meth:`from_plans`), or from
+    any explicit numbers (tests, what-ifs).
+    """
+
+    decode_step_s: float
+    prefill_s: Mapping[int, float]
+    buckets: tuple = PREFILL_BUCKETS
+
+    def prefill_seconds(self, prefix_len: int) -> float:
+        """Cost of prefilling ``prefix_len`` prompt tokens (0 tokens cost
+        nothing — the engine skips the prefill call entirely)."""
+        if prefix_len <= 0 or not self.prefill_s:
+            return 0.0
+        b = bucket_len(prefix_len, self.buckets)
+        if b in self.prefill_s:
+            return self.prefill_s[b]
+        # beyond the priced ladder: charge pro rata against the largest
+        # priced bucket (prefill cost is ~linear in tokens at these sizes)
+        top = max(self.prefill_s)
+        return self.prefill_s[top] * (b / top)
+
+    @classmethod
+    def from_plans(cls, cfg, *, batch: int, machine=None, dtype: str = "bf16",
+                   backend: str = "analytic-tpu", max_len: int = 512,
+                   buckets=PREFILL_BUCKETS,
+                   decode_step_s: float | None = None) -> "ServiceModel":
+        """Price the cell from the analytic planner.
+
+        Decode: the ``model_gemm_shapes(cfg, tokens=batch)`` workload (the
+        exact plans ``ServingEngine`` freezes).  Prefill: the same workload
+        at ``tokens=bucket`` for every bucket a ``max_len`` prompt can
+        land in.  ``decode_step_s`` overrides the decode price when the
+        caller already planned it (e.g. a ``DeploymentOption``'s
+        ``seconds_per_step``), skipping the duplicate sweep.
+        """
+        from repro import gemm
+        from repro.core.autotune import model_gemm_shapes
+
+        if decode_step_s is None:
+            decode_step_s = _workload_seconds(gemm.plan_many(
+                model_gemm_shapes(cfg, tokens=batch), backend=backend,
+                machine=machine, dtype=dtype))
+        prefill: dict[int, float] = {}
+        for b in bucket_cover(max_len, buckets):
+            prefill[b] = _workload_seconds(gemm.plan_many(
+                model_gemm_shapes(cfg, tokens=b), backend=backend,
+                machine=machine, dtype=dtype))
+        return cls(decode_step_s=float(decode_step_s), prefill_s=prefill,
+                   buckets=tuple(buckets))
+
+
+@dataclasses.dataclass
+class _Live:
+    """A request occupying a slot (or waiting in the queue)."""
+
+    req: SimRequest
+    tokens: int = 0
+
+
+class SlotServer:
+    """The simulated engine: schedule with :meth:`offer`, step on events.
+
+    Args:
+        sim: the event loop this server schedules on.
+        service: per-step / per-prefill costs.
+        max_batch: decode-slot pool size.
+        max_len: per-slot cache length — long prompts are trimmed exactly
+            as the real engine trims them (``prompt[-max_len + new:]``).
+        policy: admission policy, one of :data:`POLICIES`.
+        metrics: collector (a fresh one by default).
+        start_at: hold the first step until this sim time (replay aligns
+            this with the real engine's drain-loop start).
+        step_times: optional iterable of *measured* step durations; when
+            given, step ``k`` costs the ``k``-th entry instead of the
+            analytic price (measured-service replay).  Falls back to the
+            model if the iterator runs dry.
+    """
+
+    def __init__(self, sim: Simulator, service: ServiceModel, *,
+                 max_batch: int, max_len: int = 512,
+                 policy: str = "greedy", metrics: Metrics | None = None,
+                 start_at: float | None = None,
+                 step_times: Iterable[float] | None = None):
+        if policy not in POLICIES:
+            raise ValueError(f"unknown admission policy {policy!r}; "
+                             f"have {POLICIES}")
+        self.sim = sim
+        self.service = service
+        self.max_batch = int(max_batch)
+        self.max_len = int(max_len)
+        self.policy = policy
+        self.metrics = metrics if metrics is not None else Metrics()
+        self.queue: collections.deque[_Live] = collections.deque()
+        self.slots: list[_Live | None] = [None] * self.max_batch
+        self.steps_run = 0
+        self._stepping = False
+        self._started = start_at is None
+        self._step_times: Iterator[float] | None = \
+            iter(step_times) if step_times is not None else None
+        if start_at is not None:
+            sim.schedule_at(start_at, self._start)
+
+    # -- driving ------------------------------------------------------------
+    def offer(self, req: SimRequest) -> None:
+        """Accept one request (call at its arrival time)."""
+        self.metrics.on_arrival(req.rid, self.sim.now, req.prompt_len,
+                                req.decode_len)
+        self.queue.append(_Live(req=req))
+        self._kick()
+
+    def drive(self, requests: Iterable[SimRequest]) -> None:
+        """Schedule a whole traffic stream's arrivals."""
+        for req in requests:
+            self.sim.schedule_at(req.arrival_s,
+                                 functools.partial(self.offer, req))
+
+    def _start(self) -> None:
+        self._started = True
+        self._kick()
+
+    def _kick(self) -> None:
+        if self._started and not self._stepping and (
+                self.queue or any(self.slots)):
+            self._stepping = True
+            self.sim.schedule(0.0, self._step)
+
+    # -- one engine step ----------------------------------------------------
+    def _free(self) -> list[int]:
+        return [i for i, s in enumerate(self.slots) if s is None]
+
+    def _admit(self) -> list[_Live]:
+        free = self._free()
+        if self.policy == "one-per-step":
+            free = free[:1]
+        elif self.policy == "drain-first" and len(free) < self.max_batch:
+            free = []
+        admitted = []
+        for slot in free:
+            if not self.queue:
+                break
+            live = self.queue.popleft()
+            self.slots[slot] = live
+            self.metrics.on_admit(live.req.rid, self.sim.now)
+            admitted.append(live)
+        return admitted
+
+    def _prefix_len(self, req: SimRequest) -> int:
+        # mirror the engine: prompt trimmed to the cache window, last
+        # prompt token fed to the first decode step rather than prefilled
+        kept = min(req.prompt_len, max(1, self.max_len - req.decode_len))
+        return max(kept - 1, 0)
+
+    def _step(self) -> None:
+        t0 = self.sim.now
+        admitted = self._admit()
+        active = [s for s in self.slots if s is not None]
+        if not active:
+            self._stepping = False
+            return
+        cost = None
+        if self._step_times is not None:
+            cost = next(self._step_times, None)
+        if cost is None:
+            cost = self.service.decode_step_s + sum(
+                self.service.prefill_seconds(self._prefix_len(a.req))
+                for a in admitted)
+        sample = StepSample(t=t0, dt=cost, active=len(active),
+                            admitted=len(admitted),
+                            queue_depth=len(self.queue))
+        self.sim.schedule(cost, functools.partial(self._finish_step, sample))
+
+    def _finish_step(self, sample: StepSample) -> None:
+        now = self.sim.now
+        for i, live in enumerate(self.slots):
+            if live is None:
+                continue
+            live.tokens += 1
+            self.metrics.on_token(live.req.rid, now)
+            if live.tokens >= live.req.decode_len:
+                self.metrics.on_finish(live.req.rid, now)
+                self.slots[i] = None
+        self.steps_run += 1
+        self.metrics.on_step(sample)
+        self._stepping = False
+        self._kick()
+
+
+def simulate_serving(service: ServiceModel, traffic: Traffic, *,
+                     max_batch: int, max_len: int = 512,
+                     policy: str = "greedy", requests: int = 100,
+                     seed: int | None = None, horizon: float | None = None,
+                     config: Mapping[str, Any] | None = None) -> SimReport:
+    """One full run: traffic -> slot server -> metrics report.
+
+    Args:
+        service / traffic: who prices the work and who sends it.
+        max_batch / max_len / policy: the serving configuration under test.
+        requests: stream length drawn from ``traffic``.
+        seed: simulator RNG seed (defaults to the traffic's own seed; the
+            generators pre-draw their randomness, so this only matters for
+            future stochastic modules).
+        horizon: optional sim-time cutoff — requests still in flight are
+            reported as ``unfinished``.
+        config: extra identity keys merged into the report's ``config``.
+
+    Returns:
+        A :class:`~repro.simulate.metrics.SimReport` for the run.
+    """
+    sim = Simulator(seed=traffic.seed if seed is None else seed,
+                    horizon=horizon)
+    server = SlotServer(sim, service, max_batch=max_batch, max_len=max_len,
+                        policy=policy)
+    server.drive(traffic.requests(requests))
+    sim.run()
+    full = {"traffic": traffic.name, "batch": max_batch, "policy": policy,
+            "max_len": max_len, "requests": requests,
+            "seed": traffic.seed if seed is None else seed,
+            **dict(config or {})}
+    report = server.metrics.report(config=full, max_batch=max_batch)
+    return report

@@ -1,0 +1,500 @@
+"""Discrete-event serving simulator: traffic determinism, event-queue
+ordering, slot-server semantics, SLO-driven autoconfiguration, and the
+closed loop against the real engine.
+
+The acceptance properties:
+
+* traffic generators are seeded-deterministic, prefix-stable, and hit
+  their nominal rates; trace replay round-trips the request list
+  bit-exactly;
+* a single simulated request's latency matches the closed-form
+  ``prefill + decode_len * step`` cost;
+* replaying a real ``ServingEngine`` trace reproduces the completion
+  order exactly and per-request latencies within the documented 2%;
+* ``autoconfigure(slo=...)`` picks a *smaller* batch than the
+  peak-throughput mode on a scenario where the tail demands it, with
+  machine-readable ``slo_*`` rejections in the deployment report.
+"""
+import json
+import math
+import statistics
+
+import pytest
+
+from repro.configs import get_config
+from repro.serving.buckets import PREFILL_BUCKETS, bucket_cover, bucket_len
+from repro.simulate import (
+    SLO,
+    BurstyTraffic,
+    LengthDist,
+    Metrics,
+    PoissonTraffic,
+    ServiceModel,
+    SimReport,
+    Simulator,
+    SlotServer,
+    TraceTraffic,
+    UniformTraffic,
+    default_traffic,
+    evaluate_deployment,
+    make_traffic,
+    percentile,
+    replay,
+    simulate_serving,
+    trace_requests,
+    trace_traffic,
+)
+from repro.simulate.autoconf import REJECT_SLO_P99, REJECT_SLO_UNFINISHED
+
+QWEN = "qwen2-1.5b"
+
+
+def _service(decode=0.01, prefill=None):
+    return ServiceModel(decode_step_s=decode,
+                        prefill_s=prefill or {b: 0.05 for b in
+                                              PREFILL_BUCKETS})
+
+
+# ---------------------------------------------------------------------------
+# Prefill buckets (shared real-engine / simulator ladder)
+# ---------------------------------------------------------------------------
+
+
+def test_bucket_len_rounds_up_the_ladder():
+    assert bucket_len(1) == 32
+    assert bucket_len(32) == 32
+    assert bucket_len(33) == 64
+    assert bucket_len(1024) == 1024
+    # beyond the ladder: next multiple of the last rung
+    assert bucket_len(1025) == 2048
+    assert bucket_len(2049) == 3072
+
+
+def test_bucket_cover_prices_every_reachable_bucket():
+    assert bucket_cover(128) == [32, 64, 128]
+    assert bucket_cover(100) == [32, 64, 128]
+    assert bucket_cover(2000) == [32, 64, 128, 256, 512, 1024, 2048]
+
+
+# ---------------------------------------------------------------------------
+# Traffic generators
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("make", [
+    lambda seed: PoissonTraffic(rate=20, prompt_len=(8, 100),
+                                decode_len=16, seed=seed),
+    lambda seed: UniformTraffic(rate=20, prompt_len=32, decode_len=(4, 64),
+                                seed=seed),
+    lambda seed: BurstyTraffic(rate=40, burst=4, prompt_len=16,
+                               decode_len=8, seed=seed),
+])
+def test_traffic_deterministic_and_prefix_stable(make):
+    a, b = make(3).requests(200), make(3).requests(200)
+    assert a == b                           # same seed -> same stream
+    assert make(3).requests(50) == a[:50]   # longer stream extends shorter
+    assert make(4).requests(200) != a       # seed matters
+    assert all(r.arrival_s <= s.arrival_s for r, s in zip(a, a[1:]))
+    assert all(r.prompt_len >= 1 and r.decode_len >= 1 for r in a)
+
+
+def test_poisson_interarrival_mean_within_tolerance():
+    reqs = PoissonTraffic(rate=50, seed=1).requests(4000)
+    gaps = [b.arrival_s - a.arrival_s for a, b in zip(reqs, reqs[1:])]
+    assert statistics.mean(gaps) == pytest.approx(1 / 50, rel=0.05)
+
+
+def test_uniform_traffic_is_constant_gap():
+    reqs = UniformTraffic(rate=8, seed=0).requests(100)
+    gaps = {round(b.arrival_s - a.arrival_s, 12)
+            for a, b in zip(reqs, reqs[1:])}
+    assert gaps == {round(1 / 8, 12)}
+
+
+def test_bursty_traffic_matches_long_run_rate():
+    tr = BurstyTraffic(rate=40, burst=8, intra_gap=1e-3, seed=2)
+    reqs = tr.requests(4000)
+    span = reqs[-1].arrival_s - reqs[0].arrival_s
+    assert len(reqs) / span == pytest.approx(40, rel=0.1)
+    gaps = [b.arrival_s - a.arrival_s for a, b in zip(reqs, reqs[1:])]
+    # 7 of every 8 gaps are the intra-burst spacing
+    assert sum(1 for g in gaps if g == pytest.approx(1e-3)) \
+        >= 0.8 * len(gaps) * 7 / 8
+
+
+def test_trace_traffic_round_trips_bit_exactly():
+    src = BurstyTraffic(rate=30, burst=4, prompt_len=(8, 64),
+                        decode_len=(2, 32), seed=5).requests(64)
+    assert TraceTraffic(src).requests() == src
+    assert TraceTraffic(src).requests(10) == src[:10]
+
+
+def test_length_dist_coercion_and_bounds():
+    assert LengthDist.coerce(7) == LengthDist(kind="fixed", lo=7)
+    assert LengthDist.coerce((3, 9)) == LengthDist(kind="uniform", lo=3,
+                                                   hi=9)
+    geo = LengthDist.coerce({"kind": "geometric", "lo": 4, "mean": 32.0})
+    draws = [geo.sample(__import__("random").Random(i)) for i in range(200)]
+    assert min(draws) >= 4
+    assert LengthDist(kind="uniform", lo=8, hi=100).prefill_buckets(128) \
+        == [32, 64, 128]
+    with pytest.raises(ValueError):
+        LengthDist(kind="uniform", lo=9, hi=3)
+    with pytest.raises(ValueError):
+        LengthDist(kind="nope")
+
+
+def test_make_traffic_factory():
+    tr = make_traffic("poisson", rate=10, seed=1)
+    assert isinstance(tr, PoissonTraffic) and tr.rate == 10
+    with pytest.raises(ValueError, match="unknown traffic kind"):
+        make_traffic("fractal", rate=1)
+
+
+# ---------------------------------------------------------------------------
+# Event queue
+# ---------------------------------------------------------------------------
+
+
+def test_simulator_orders_events_and_breaks_ties_by_schedule_order():
+    sim = Simulator(seed=0)
+    fired = []
+    sim.schedule(2.0, lambda: fired.append("late"))
+    sim.schedule(1.0, lambda: fired.append("a"))
+    sim.schedule(1.0, lambda: fired.append("b"))   # same time, queued after
+    ev = sim.schedule(1.5, lambda: fired.append("cancelled"))
+    ev.cancel()
+    end = sim.run()
+    assert fired == ["a", "b", "late"]
+    assert end == 2.0 and sim.now == 2.0
+    assert sim.events_processed == 3
+
+
+def test_simulator_horizon_and_past_scheduling():
+    sim = Simulator(seed=0, horizon=1.0)
+    fired = []
+    sim.schedule(0.5, lambda: fired.append(1))
+    sim.schedule(2.0, lambda: fired.append(2))
+    assert sim.run() == 1.0
+    assert fired == [1] and sim.pending() == 1
+    with pytest.raises(ValueError, match="before now"):
+        sim.schedule_at(0.2, lambda: None)
+
+
+def test_percentile_linear_interpolation():
+    xs = list(range(1, 101))
+    assert percentile(xs, 0) == 1.0
+    assert percentile(xs, 100) == 100.0
+    assert percentile(xs, 50) == pytest.approx(50.5)
+    assert percentile([5.0], 99) == 5.0
+    assert math.isnan(percentile([], 50))
+
+
+# ---------------------------------------------------------------------------
+# Slot server
+# ---------------------------------------------------------------------------
+
+
+def test_single_request_latency_is_closed_form():
+    # prompt 10 -> prefix 9 -> bucket 32; decode_len 5 steps
+    svc = _service(decode=0.01, prefill={32: 0.05})
+    tr = TraceTraffic([__import__("repro.simulate.traffic",
+                                  fromlist=["SimRequest"]).SimRequest(
+        rid=0, arrival_s=0.0, prompt_len=10, decode_len=5)])
+    rep = simulate_serving(svc, tr, max_batch=4, max_len=128)
+    assert rep.requests == {"submitted": 1, "finished": 1, "unfinished": 0}
+    # first step carries the prefill, every step decodes one token
+    want = 0.05 + 5 * 0.01
+    assert rep.latency["max"] == pytest.approx(want)
+    assert rep.ttft["max"] == pytest.approx(0.05 + 0.01)
+    assert rep.steps == 5
+
+
+def test_decode_step_cost_is_occupancy_independent():
+    # two same-time arrivals decode together: same span as one request
+    from repro.simulate.traffic import SimRequest
+    svc = _service(decode=0.01, prefill={32: 0.0})
+    one = simulate_serving(svc, TraceTraffic(
+        [SimRequest(0, 0.0, 4, 6)]), max_batch=4)
+    two = simulate_serving(svc, TraceTraffic(
+        [SimRequest(0, 0.0, 4, 6), SimRequest(1, 0.0, 4, 6)]), max_batch=4)
+    assert two.span_s == pytest.approx(one.span_s)
+    assert two.steps == one.steps
+
+
+def test_admission_policies_order_tail_latency():
+    svc = _service(decode=0.01, prefill={b: 0.02 for b in PREFILL_BUCKETS})
+    tr = PoissonTraffic(rate=30, prompt_len=16, decode_len=16, seed=7)
+    reports = {p: simulate_serving(svc, tr, max_batch=8, policy=p,
+                                   requests=150)
+               for p in ("greedy", "one-per-step", "drain-first")}
+    for rep in reports.values():
+        assert rep.finite
+    # batch-synchronous draining stalls admissions: strictly worse tail
+    assert reports["drain-first"].latency["p99"] \
+        > reports["greedy"].latency["p99"]
+    with pytest.raises(ValueError, match="unknown admission policy"):
+        simulate_serving(svc, tr, max_batch=8, policy="psychic")
+
+
+def test_overloaded_server_reports_unfinished_under_horizon():
+    svc = _service(decode=0.1, prefill={32: 0.1})
+    tr = PoissonTraffic(rate=100, prompt_len=8, decode_len=16, seed=0)
+    rep = simulate_serving(svc, tr, max_batch=2, requests=200, horizon=5.0)
+    assert rep.requests["unfinished"] > 0
+    assert rep.queue["max_depth"] > 0
+    slo = SLO(p99_latency_s=1e9)        # any latency OK, but must finish
+    assert any(v["reason"] == REJECT_SLO_UNFINISHED
+               for v in slo.check(rep))
+
+
+def test_sim_report_json_round_trip(tmp_path):
+    svc = _service()
+    tr = PoissonTraffic(rate=20, seed=1)
+    rep = simulate_serving(svc, tr, max_batch=4, requests=50,
+                           config={"machine": "m", "dtype": "bf16"})
+    path = rep.save(str(tmp_path / "sim.json"))
+    back = SimReport.load(path)
+    assert back.latency == rep.latency
+    assert back.finish_order == rep.finish_order
+    assert back.config["machine"] == "m"
+    assert "sim" in rep.table()
+
+
+def test_service_model_prices_from_planner():
+    cfg = get_config(QWEN, smoke=True)
+    svc = ServiceModel.from_plans(cfg, batch=4, machine="tpu-v5e",
+                                  max_len=128)
+    assert svc.decode_step_s > 0
+    assert set(svc.prefill_s) == {32, 64, 128}
+    assert all(v > 0 for v in svc.prefill_s.values())
+    # longer prompts cost at least as much
+    assert svc.prefill_s[128] >= svc.prefill_s[32]
+    # beyond the priced ladder: pro-rata, monotone
+    assert svc.prefill_seconds(4096) > svc.prefill_seconds(128)
+    # empty ladder backstop (measured replay)
+    assert ServiceModel(decode_step_s=1.0,
+                        prefill_s={}).prefill_seconds(100) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# SLO-driven autoconfiguration (config-only)
+# ---------------------------------------------------------------------------
+
+
+def _gap9_report():
+    from repro.serving.report import plan_deployment
+    cfg = get_config(QWEN, smoke=True)
+    return cfg, plan_deployment(cfg, machines=("gap9-fc",),
+                                batches=(1, 2, 4, 8, 16))
+
+
+def test_slo_mode_rejects_the_throughput_pick():
+    """The acceptance scenario: on a compute-bound edge cell the decode
+    step slows down with the slot pool, so the biggest batch wins peak
+    throughput but loses the simulated p99 tail — the SLO pick must be a
+    smaller batch, with the oversized cell machine-readably rejected."""
+    cfg, report = _gap9_report()
+    base = report.select()
+    traffic = PoissonTraffic(rate=5, prompt_len=16, decode_len=16, seed=0)
+    sel = evaluate_deployment(cfg, report, slo=SLO(p99_latency_s=0.35),
+                              traffic=traffic, requests=150)
+    assert base.batch == 16
+    assert sel.option.batch < base.batch
+    # the peak-throughput cell is rejected with the SLO reason + evidence
+    rej = [r for r in report.rejected
+           if r.batch == base.batch and r.reason == REJECT_SLO_P99]
+    assert rej, [r.as_dict() for r in report.rejected]
+    detail = rej[0].as_dict()["detail"]
+    assert detail["traffic"] == "poisson@5rps"
+    assert detail["violations"][0]["observed"] > 0.35
+    # the evaluation is attached to the report, options carry sim summaries
+    assert report.slo["selected"]["batch"] == sel.option.batch
+    assert all(o.sim is not None for o in report.options)
+    assert json.dumps(report.to_json())    # JSON-serialisable end to end
+
+
+def test_slo_infeasible_raises_with_per_cell_reasons():
+    cfg, report = _gap9_report()
+    traffic = PoissonTraffic(rate=5, prompt_len=16, decode_len=16, seed=0)
+    with pytest.raises(ValueError, match="slo_p99_latency_exceeded"):
+        evaluate_deployment(cfg, report, slo=SLO(p99_latency_s=1e-4),
+                            traffic=traffic, requests=100)
+    # ...and the rejections still land in the report for post-mortems
+    assert any(r.reason == REJECT_SLO_P99 for r in report.rejected)
+
+
+def test_slo_coercion_and_default_traffic():
+    assert SLO.coerce(0.5).p99_latency_s == 0.5
+    assert SLO.coerce({"p95_ttft_s": 0.1}).p95_ttft_s == 0.1
+    with pytest.raises(TypeError):
+        SLO.coerce("tight")
+    _, report = _gap9_report()
+    tr = default_traffic(report, utilization=0.5)
+    peak = max(o.tokens_per_second for o in report.options)
+    assert tr.rate == pytest.approx(0.5 * peak / 16)
+
+
+# ---------------------------------------------------------------------------
+# gemm.sweep scenarios axis
+# ---------------------------------------------------------------------------
+
+
+def test_sweep_scenarios_axis_tags_rows_and_defaults_to_none():
+    from repro import gemm
+    from repro.simulate import TrafficScenario
+
+    plain = gemm.sweep([(64, 64, 64)], machines=("tpu-v5e",))
+    assert plain.grid["scenarios"] == [None]
+    assert all(r.scenario is None for r in plain.rows)
+    assert "scenario" in plain.rows[0].as_dict()
+
+    cfg = get_config(QWEN, smoke=True)
+    scen = TrafficScenario(
+        name="steady",
+        traffic=PoissonTraffic(rate=5, prompt_len=(8, 100)))
+    bound = scen.bind(cfg, max_len=128)
+    res = gemm.sweep([(64, 64, 64)], machines=("tpu-v5e",),
+                     scenarios=[bound])
+    assert {r.scenario for r in res.rows} == {"steady"}
+    # the scenario appended the prefill-bucket model GEMMs to the base list
+    assert len(res.rows) > len(plain.rows)
+    assert res.to_json()["grid"]["scenarios"] == ["steady"]
+    assert res.filter(scenario="steady") == res.rows
+
+
+# ---------------------------------------------------------------------------
+# Closed loop against the real engine (jax)
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def smoke_engine_trace():
+    import jax
+    from repro.models.common import HOST_MESH, split_params
+    from repro.models.model import LM
+    from repro.serving.engine import Request, ServingEngine
+
+    cfg = get_config(QWEN, smoke=True)
+    lm = LM(cfg, HOST_MESH)
+    values, _ = split_params(lm.init(jax.random.key(0)))
+    eng = ServingEngine(lm, values, max_batch=3, max_len=128)
+    prompts = [[5, 6, 7, 8], [1, 2, 3], [9, 4, 2, 7, 5, 3], [11, 12],
+               [4, 4, 4]]
+    for i, p in enumerate(prompts):
+        eng.submit(Request(rid=i, prompt=p, max_new_tokens=4 + i))
+    done = eng.run_until_drained()
+    return eng, done
+
+
+def test_engine_stamps_request_timestamps(smoke_engine_trace):
+    eng, done = smoke_engine_trace
+    assert len(done) == 5
+    for r in done:
+        assert r.t_submit <= r.t_admit <= r.t_first_token <= r.t_finish
+        assert r.wait_s >= 0 and r.service_s > 0
+        assert r.latency_s == pytest.approx(r.wait_s + r.service_s)
+        assert r.ttft_s <= r.latency_s
+    perf = eng.perf_report()
+    m = perf["measured_requests"]
+    assert m["finished"] == 5
+    for key in ("wait_s", "service_s", "latency_s", "ttft_s"):
+        assert m[key]["mean"] > 0
+        assert m[key]["max"] >= m[key]["mean"]
+
+
+def test_trace_schema_and_event_consistency(smoke_engine_trace):
+    eng, done = smoke_engine_trace
+    trace = eng.trace_json()
+    assert trace["schema"] == "repro.serving/trace-v1"
+    kinds = {e["type"] for e in trace["events"]}
+    assert kinds == {"submit", "admit", "first_token", "finish", "step"}
+    # every request appears once per lifecycle kind
+    for kind in ("submit", "admit", "first_token", "finish"):
+        rids = [e["rid"] for e in trace["events"] if e["type"] == kind]
+        assert sorted(rids) == [0, 1, 2, 3, 4]
+    # each event kind is chronological (step events carry their *start*
+    # time, so the flat list interleaves kinds but never reorders one)
+    for kind in kinds:
+        times = [e["t"] for e in trace["events"] if e["type"] == kind]
+        assert times == sorted(times)
+    assert all(e["dt"] > 0 for e in trace["events"] if e["type"] == "step")
+
+
+def test_replay_closed_loop_matches_real_engine(smoke_engine_trace):
+    """The tentpole validation: measured-service replay reproduces the
+    real run's step count, completion order *exactly*, and per-request
+    latency within the documented 2% tolerance."""
+    eng, done = smoke_engine_trace
+    trace = eng.trace_json()
+    rep = replay(trace)
+    assert rep.mode == "measured"
+    assert rep.order_match and rep.steps_match
+    assert len(rep.rows) == 5
+    for row in rep.rows:
+        assert row.ape < 0.02, row.as_dict()
+    assert rep.mape < 2.0
+    # the recorded arrival stream round-trips bit-exactly through the
+    # traffic layer
+    reqs = trace_requests(trace)
+    assert trace_traffic(trace).requests() == reqs
+    assert [r.decode_len for r in sorted(reqs, key=lambda r: r.rid)] \
+        == [len(r.generated) for r in sorted(done, key=lambda r: r.rid)]
+
+
+def test_replay_model_service_still_matches_order(smoke_engine_trace):
+    eng, _ = smoke_engine_trace
+    svc = ServiceModel(decode_step_s=0.05, prefill_s={32: 0.08})
+    rep = replay(eng.trace_json(), svc)
+    assert rep.mode == "model"
+    assert rep.order_match and rep.steps_match
+    assert math.isfinite(rep.mape)
+    assert rep.to_json()["schema"] == "repro.simulate/replay-v1"
+
+
+def test_run_until_drained_raises_on_truncation():
+    import jax
+    from repro.models.common import HOST_MESH, split_params
+    from repro.models.model import LM
+    from repro.serving.engine import (DrainTruncatedError, Request,
+                                      ServingEngine)
+
+    cfg = get_config(QWEN, smoke=True)
+    lm = LM(cfg, HOST_MESH)
+    values, _ = split_params(lm.init(jax.random.key(0)))
+    eng = ServingEngine(lm, values, max_batch=2, max_len=128)
+    for i in range(3):
+        eng.submit(Request(rid=i, prompt=[1, 2, 3], max_new_tokens=50))
+    with pytest.raises(DrainTruncatedError, match="truncated after 5"):
+        eng.run_until_drained(max_steps=5)
+
+
+def test_autoconfigure_slo_picks_smaller_batch_than_throughput():
+    """End-to-end acceptance: the engine's SLO mode configures a smaller
+    max_batch than the peak-throughput mode on the same grid, and the
+    deployment report records why."""
+    import jax
+    from repro.models.common import HOST_MESH, split_params
+    from repro.models.model import LM
+    from repro.serving.engine import Request, ServingEngine
+
+    cfg = get_config(QWEN, smoke=True)
+    lm = LM(cfg, HOST_MESH)
+    values, _ = split_params(lm.init(jax.random.key(0)))
+    kwargs = dict(machine="gap9-fc", batches=(1, 2, 4, 8, 16),
+                  max_len=512)
+    peak = ServingEngine.autoconfigure(lm, values, **kwargs)
+    traffic = PoissonTraffic(rate=5, prompt_len=16, decode_len=16, seed=0)
+    slo = ServingEngine.autoconfigure(
+        lm, values, slo=SLO(p99_latency_s=0.35), traffic=traffic,
+        sim_requests=150, **kwargs)
+    assert slo.max_batch < peak.max_batch
+    ac = slo.autoconfig["slo"]
+    assert ac["slo"]["p99_latency_s"] == 0.35
+    assert ac["policy"] == "greedy"
+    assert any(r["reason"] == REJECT_SLO_P99 for r in ac["rejected"])
+    assert any(r["batch"] == peak.max_batch for r in ac["rejected"])
+    # the SLO-configured engine still serves correctly
+    slo.submit(Request(rid=0, prompt=[1, 2, 3], max_new_tokens=4))
+    out = slo.run_until_drained()
+    assert len(out) == 1 and len(out[0].generated) == 4
