@@ -20,6 +20,11 @@ Workloads:
   sim_latency  serving-simulator smoke — 2000 Poisson requests through an
                analytically priced tpu-v5e cell (``repro.simulate``);
                asserts a finite p99 and records events/second.
+  sim_faults   overload-resilience smoke — the same cell driven at 2.5x its
+               sustainable rate under the ``storm`` fault scenario with a
+               per-request deadline; asserts the shedder keeps the run
+               finite (shed > 0, unfinished == 0) and records the shed
+               fraction and survivor tail.
 
 ``BENCH_planner.json`` at the repo root is an **append-only perf
 trajectory**: every run appends one record keyed by the current git SHA
@@ -204,12 +209,57 @@ def bench_sim_latency() -> dict:
     }
 
 
+def bench_sim_faults() -> dict:
+    """Overload-resilience smoke (repro.simulate.faults): the tpu-v5e cell
+    from ``sim_latency`` driven at 2.5x its sustainable arrival rate under
+    the ``storm`` scenario (throttle windows + slot failures + a flash
+    crowd) with a per-request deadline.  Without shedding the queue would
+    grow without bound; the deadline-armed simulator must shed the excess
+    and finish everything else."""
+    from repro.simulate import PoissonTraffic, ServiceModel, simulate_serving
+
+    cfg = get_config("qwen2-1.5b")
+    service = ServiceModel.from_plans(cfg, batch=8, machine="tpu-v5e")
+    decode_len = 16
+    sustainable_rps = 8 / (service.decode_step_s * decode_len)
+    deadline_s = 5 * decode_len * service.decode_step_s
+    traffic = PoissonTraffic(rate=2.5 * sustainable_rps, prompt_len=(8, 200),
+                             decode_len=decode_len, seed=0)
+
+    def run():
+        return simulate_serving(service, traffic, max_batch=8,
+                                requests=2000, deadline_s=deadline_s,
+                                faults="storm",
+                                config={"machine": "tpu-v5e",
+                                        "dtype": "bf16"})
+    rep, t = _best_of(run)
+    assert rep.shed_count > 0, "a 2.5x overload must shed"
+    assert rep.requests["unfinished"] == 0, "shedding must keep the run finite"
+    assert rep.finite, "survivor tail must be finite"
+    events = rep.steps + 2 * rep.requests["submitted"]
+    return {
+        "requests": rep.requests["submitted"],
+        "finished": rep.requests["finished"],
+        "shed": rep.shed_count,
+        "shed_fraction": rep.shed_fraction,
+        "shed_causes": rep.shed["causes"],
+        "slot_failures": rep.faults.get("slot_failures", 0),
+        "throttled_steps": rep.faults.get("throttled_steps", 0),
+        "deadline_s": deadline_s,
+        "overload_factor": 2.5,
+        "wall_s": t,
+        "events_per_s": events / t,
+        "p99_latency_s": rep.latency["p99"],
+    }
+
+
 def main() -> None:
     table2 = bench_table2_gap8()
     allarch = bench_allarch_tpu()
     cold = bench_cold_tune()
     fidelity = bench_measure_fidelity()
     sim = bench_sim_latency()
+    faults = bench_sim_faults()
     combined_scalar = table2["scalar_s"] + allarch["scalar_s"]
     combined_batched = table2["batched_s"] + allarch["batched_s"]
     report = {
@@ -218,6 +268,7 @@ def main() -> None:
             "allarch_tpu": allarch,
             "cold_tune": cold,
             "sim_latency": sim,
+            "sim_faults": faults,
         },
         "measure_fidelity": fidelity,
         "combined": {
@@ -240,7 +291,8 @@ def main() -> None:
     print(f"\ncombined Table-2 + all-arch speedup: "
           f"{report['combined']['speedup']:.1f}x; smoke-campaign host MAPE "
           f"{fidelity['mape_pct']:.1f}%; sim {sim['events_per_s']:,.0f} "
-          f"events/s "
+          f"events/s; storm overload shed {faults['shed_fraction']:.0%} "
+          f"with 0 unfinished "
           f"(record {sha[:12]} appended to {os.path.abspath(OUT_PATH)}; "
           f"{len(trajectory['records'])} records in trajectory)")
 

@@ -6,6 +6,8 @@
     PYTHONPATH=src python examples/serve_batch.py --autoconfigure \\
         --machine gap9-fc --slo-p99 0.35 --rate 5 \\
         --trace /tmp/trace.json # simulation-backed SLO pick + event trace
+    PYTHONPATH=src python examples/serve_batch.py --requests 24 \\
+        --deadline 2.0 --queue-limit 8   # overload: shed + backpressure
 
 With ``--autoconfigure`` the engine comes from the ranked deployment grid
 (``repro.serving.plan_deployment``): cells whose modelled footprint
@@ -14,8 +16,14 @@ budget are pruned before the GEMM sweep, and the surviving cell with the
 best predicted decode throughput is frozen into the engine.  Adding
 ``--slo-p99`` instead picks the cell by *simulated* SLO attainment under
 Poisson traffic (``repro.simulate``) — usually a smaller batch than the
-peak-throughput winner.  ``--trace`` writes the engine's event trace for
-``python -m repro.simulate replay`` sim-vs-real validation.
+peak-throughput winner; ``--faults throttle20`` on top makes the pick
+perturbation-robust (SLO attainment *under* a duty-cycled thermal
+throttle).  ``--deadline`` / ``--queue-limit`` arm the overload path —
+expired or unmeetable requests are shed at admission, a full queue
+pushes back on the submitter, and the shed/expired/degraded counters
+land in ``perf_report()`` (see docs/RESILIENCE.md).  ``--trace`` writes
+the engine's event trace for ``python -m repro.simulate replay``
+sim-vs-real validation.
 """
 import argparse
 import os
@@ -37,6 +45,11 @@ def main() -> None:
     ap.add_argument("--no-memory", action="store_true")
     ap.add_argument("--slo-p99", type=float, default=None)
     ap.add_argument("--rate", type=float, default=None)
+    ap.add_argument("--deadline", type=float, default=None)
+    ap.add_argument("--queue-limit", type=int, default=None)
+    ap.add_argument("--faults", default=None)
+    ap.add_argument("--on-truncate", choices=["raise", "report"],
+                    default="raise")
     ap.add_argument("--trace", default=None)
     a = ap.parse_args()
     slo = traffic = None
@@ -49,7 +62,9 @@ def main() -> None:
     serve_demo(a.arch, n_requests=a.requests, max_new=a.max_new,
                max_batch=a.max_batch, autoconfigure=a.autoconfigure,
                machine=a.machine, memory=not a.no_memory, slo=slo,
-               traffic=traffic, trace_path=a.trace)
+               traffic=traffic, deadline_s=a.deadline,
+               queue_limit=a.queue_limit, faults=a.faults,
+               on_truncate=a.on_truncate, trace_path=a.trace)
 
 
 if __name__ == "__main__":

@@ -21,6 +21,7 @@ from repro.checkpoint.manager import CheckpointManager
 from repro.models.common import HOST_MESH, split_params
 from repro.models.model import LM
 from repro.serving.engine import Request, ServingEngine
+from repro.serving.resilience import retry_with_backoff
 
 
 def serve_demo(arch: str, *, smoke: bool = True, n_requests: int = 8,
@@ -28,6 +29,8 @@ def serve_demo(arch: str, *, smoke: bool = True, n_requests: int = 8,
                ckpt_dir: str | None = None, seed: int = 0,
                autoconfigure: bool = False, machine: str | None = None,
                memory: bool = True, slo=None, traffic=None,
+               deadline_s: float | None = None, queue_limit: int | None = None,
+               faults=None, on_truncate: str = "raise",
                trace_path: str | None = None) -> dict:
     cfg = get_config(arch, smoke=smoke)
     lm = LM(cfg, HOST_MESH)
@@ -50,7 +53,10 @@ def serve_demo(arch: str, *, smoke: bool = True, n_requests: int = 8,
                                           dtypes=("bf16", "int8"),
                                           batches=(1, 2, 4, 8, 16),
                                           max_len=max_len, memory=memory,
-                                          slo=slo, traffic=traffic)
+                                          slo=slo, traffic=traffic,
+                                          faults=faults,
+                                          deadline_s=deadline_s,
+                                          queue_limit=queue_limit)
         ac = eng.autoconfig
         print(eng.deployment_report.table(limit=8))
         print(f"autoconfigured: max_batch={ac['max_batch']} "
@@ -59,19 +65,36 @@ def serve_demo(arch: str, *, smoke: bool = True, n_requests: int = 8,
               f"{ac['memory_headroom_bytes'] / 2**30:.2f} GiB headroom)")
         if "slo" in ac:
             sim = ac["slo"]["sim"]
-            print(f"  SLO mode ({ac['slo']['traffic']}): simulated p99 "
+            mode = "robust SLO" if ac["slo"].get("faults") else "SLO"
+            under = ac["slo"]["traffic"] + (
+                f" + faults={ac['slo']['faults']}"
+                if ac["slo"].get("faults") else "")
+            print(f"  {mode} mode ({under}): simulated p99 "
                   f"latency {sim['latency']['p99']:.4g}s, goodput "
                   f"{sim['goodput_tps']:.4g} tok/s, "
-                  f"{len(ac['slo']['rejected'])} cell(s) rejected on slo_*")
+                  f"{len(ac['slo']['rejected'])} cell(s) rejected")
     else:
-        eng = ServingEngine(lm, values, max_batch=max_batch, max_len=max_len)
+        eng = ServingEngine(lm, values, max_batch=max_batch, max_len=max_len,
+                            deadline_s=deadline_s, queue_limit=queue_limit)
     rng = np.random.default_rng(seed)
     t0 = time.perf_counter()
     for i in range(n_requests):
         plen = int(rng.integers(3, 12))
         prompt = rng.integers(0, cfg.vocab_size, size=plen).tolist()
-        eng.submit(Request(rid=i, prompt=prompt, max_new_tokens=max_new))
-    done = eng.run_until_drained()
+        req = Request(rid=i, prompt=prompt, max_new_tokens=max_new)
+        if queue_limit is None:
+            eng.submit(req)
+        else:
+            # bounded queue: on QueueFullError the retry's backpressure is
+            # "let the server catch up" — step the engine until a queue
+            # slot frees instead of sleeping wall-clock
+            def _catch_up(_dt):
+                for _ in range(64):
+                    eng.step()
+                    if len(eng.queue) < queue_limit:
+                        return
+            retry_with_backoff(lambda: eng.submit(req), sleep=_catch_up)
+    done = eng.run_until_drained(on_truncate=on_truncate)
     dt = time.perf_counter() - t0
     toks = sum(len(r.generated) for r in done)
     print(f"served {len(done)} requests, {toks} tokens in {dt:.2f}s "
@@ -82,6 +105,20 @@ def serve_demo(arch: str, *, smoke: bool = True, n_requests: int = 8,
         print(f"  measured: mean latency {m['latency_s']['mean']:.3f}s, "
               f"p95 {m['latency_s']['p95']:.3f}s, mean wait "
               f"{m['wait_s']['mean']:.3f}s")
+    res = perf.get("resilience")
+    if res:
+        deg = res["degraded"]
+        print(f"  resilience: shed {res['shed']['count']} "
+              f"({res['shed']['causes'] or 'none'}), expired "
+              f"{res['expired']}, rejected submits "
+              f"{res['rejected_submits']}, rung "
+              f"{deg['rung'] or 'nominal'} "
+              f"({len(deg['events'])} ladder event(s))")
+        if res.get("truncated"):
+            print(f"  WARNING: drain truncated with "
+                  f"{res['truncated']['active']} active / "
+                  f"{res['truncated']['queued']} queued after "
+                  f"{res['truncated']['max_steps']} steps")
     for r in sorted(done, key=lambda r: r.rid)[:4]:
         print(f"  req{r.rid}: prompt[:6]={r.prompt[:6]} -> {r.generated}")
     if trace_path:
@@ -118,6 +155,20 @@ def main() -> None:
     ap.add_argument("--rate", type=float, default=None,
                     help="arrival rate (req/s) for the --slo-p99 traffic "
                          "scenario; default derives one from the report")
+    ap.add_argument("--deadline", type=float, default=None,
+                    help="per-request latency deadline, seconds — arms "
+                         "deadline-aware admission/shedding")
+    ap.add_argument("--queue-limit", type=int, default=None,
+                    help="bounded submit queue; overflow raises "
+                         "QueueFullError and the driver retries with "
+                         "backpressure (engine steps)")
+    ap.add_argument("--faults", default=None,
+                    help="fault scenario name for robust --autoconfigure "
+                         "(e.g. throttle20; implies robust SLO mode)")
+    ap.add_argument("--on-truncate", choices=["raise", "report"],
+                    default="raise",
+                    help="partial-drain policy: raise (default) or record "
+                         "the truncation in perf_report and keep going")
     ap.add_argument("--trace", default=None,
                     help="write the engine's event trace JSON here "
                          "(consumed by python -m repro.simulate replay)")
@@ -129,10 +180,15 @@ def main() -> None:
         if a.rate is not None:
             traffic = PoissonTraffic(rate=a.rate, prompt_len=16,
                                      decode_len=a.max_new)
+    elif a.faults is not None:
+        ap.error("--faults needs --slo-p99 (robust autoconfiguration is "
+                 "SLO attainment under perturbation)")
     serve_demo(a.arch, n_requests=a.requests, max_new=a.max_new,
                max_batch=a.max_batch, max_len=a.max_len, ckpt_dir=a.ckpt_dir,
                autoconfigure=a.autoconfigure, machine=a.machine,
                memory=not a.no_memory, slo=slo, traffic=traffic,
+               deadline_s=a.deadline, queue_limit=a.queue_limit,
+               faults=a.faults, on_truncate=a.on_truncate,
                trace_path=a.trace)
 
 

@@ -53,6 +53,11 @@ class FitReport:
     # columns the measurements could not support (solved non-positive) and
     # that fit(on_nonpositive="drop") eliminated; their template rates stand.
     dropped: list[str] = dataclasses.field(default_factory=list)
+    # the robust estimator used ("huber" / "trim"), None for plain lstsq
+    robust: str | None = None
+    # sample indices the robust solve down-weighted below 0.5 — the rows it
+    # treated as outliers; residual_rms_s excludes them when robust is set
+    outliers: list[int] = dataclasses.field(default_factory=list)
 
     def as_provenance(self) -> dict[str, Any]:
         d = {
@@ -64,7 +69,49 @@ class FitReport:
         }
         if self.dropped:
             d["dropped_columns"] = list(self.dropped)
+        if self.robust:
+            d["robust"] = self.robust
+            d["outlier_samples"] = [int(i) for i in self.outliers]
         return d
+
+
+def _robust_weights(A: np.ndarray, b: np.ndarray, kind: str,
+                    trim_fraction: float) -> np.ndarray:
+    """Outlier-resistant row weights via IRLS on the full-column system.
+
+    Solve, measure residuals, re-weight, repeat until the weights settle.
+    ``"huber"`` gives weight 1 to rows within 1.345 robust standard
+    deviations (MAD scale) and ``k*scale/|r|`` beyond — a smooth
+    down-weighting; ``"trim"`` is least-trimmed-squares: the worst
+    ``trim_fraction`` of rows get weight exactly 0.  The weights live in
+    the solve's weighting space, so under ``weighting="relative"`` a
+    20x-slow thermal outlier has a 20x residual no matter how small the
+    cell — which is exactly what makes it separable from honest noise.
+    """
+    n, p = A.shape
+    w = np.ones(n)
+    for _ in range(50):
+        sw = np.sqrt(w)
+        x, *_ = np.linalg.lstsq(A * sw[:, None], b * sw, rcond=None)
+        r = np.abs(b - A @ x)
+        if kind == "huber":
+            med = float(np.median(r))
+            scale = 1.4826 * float(np.median(np.abs(r - med)))
+            if scale <= 0.0:
+                # majority of rows fit exactly (synthetic data): any scale
+                # dominated by the outliers keeps z tiny for the exact rows
+                scale = max(float(np.mean(r)), 1e-300)
+            z = r / scale
+            w_new = np.minimum(1.0, 1.345 / np.maximum(z, 1e-300))
+        else:  # trim
+            keep_n = int(np.ceil((1.0 - trim_fraction) * n))
+            keep_n = min(max(keep_n, p + 1), n)
+            thresh = np.partition(r, keep_n - 1)[keep_n - 1]
+            w_new = (r <= thresh).astype(np.float64)
+        if np.allclose(w_new, w, rtol=0.0, atol=1e-6):
+            return w_new
+        w = w_new
+    return w
 
 
 class Calibrator:
@@ -319,6 +366,7 @@ class Calibrator:
             register: bool = False, manifest_dir: str | None = None,
             per_mk_arith: bool = False, on_nonpositive: str = "raise",
             weighting: str = "absolute",
+            robust: str | None = None, trim_fraction: float = 0.1,
             extra_provenance: Mapping[str, Any] | None = None,
             ) -> tuple[MachineSpec, FitReport]:
         """One vectorized least-squares solve over all samples.
@@ -355,6 +403,16 @@ class Calibrator:
                 a microsecond cell counts as much as a second cell — the
                 right loss when the goal is MAPE over a wide-dynamic-range
                 workload.
+            robust: ``None`` (default) is the plain solve.  ``"huber"``
+                down-weights outlier samples smoothly (IRLS, k=1.345, MAD
+                scale); ``"trim"`` zeroes the worst ``trim_fraction`` of
+                rows (least-trimmed-squares).  Use on field campaigns where
+                a slice of the samples is corrupted — thermal throttling,
+                a background process — and would otherwise drag every rate:
+                the weights are computed once on the full-column system and
+                the flagged rows are recorded in ``FitReport.outliers``.
+            trim_fraction: fraction of rows ``robust="trim"`` discards
+                (default 0.1); must be in [0, 0.5).
             extra_provenance: merged into the fitted spec's provenance.
 
         Returns:
@@ -375,6 +433,12 @@ class Calibrator:
         if weighting not in ("absolute", "relative"):
             raise ValueError(f"weighting must be 'absolute' or 'relative', "
                              f"got {weighting!r}")
+        if robust not in (None, "huber", "trim"):
+            raise ValueError(f"robust must be None, 'huber' or 'trim', "
+                             f"got {robust!r}")
+        if robust == "trim" and not 0.0 <= trim_fraction < 0.5:
+            raise ValueError(f"trim_fraction must be in [0, 0.5), "
+                             f"got {trim_fraction!r}")
         t = np.asarray(list(seconds), np.float64)
         A, columns = self.design_matrix(problems, micro_kernels,
                                         per_mk_arith=per_mk_arith)
@@ -405,8 +469,18 @@ class Calibrator:
                 adj = t - A[:, dropped] @ inv
             return adj / t if weighting == "relative" else adj
 
+        # robust row weights, computed once on the full-column system (the
+        # outlier verdict should not depend on which columns later drop);
+        # applied as sqrt-row-scaling so the lstsq below minimizes the
+        # weighted loss.
+        rw = np.ones(len(t))
+        if robust is not None:
+            rw = _robust_weights(Aw, solve_target(), robust, trim_fraction)
+        sw = np.sqrt(rw)
+
         while True:
-            x, _, rank, _ = np.linalg.lstsq(Aw[:, keep], solve_target(),
+            x, _, rank, _ = np.linalg.lstsq(Aw[:, keep] * sw[:, None],
+                                            solve_target() * sw,
                                             rcond=None)
             if rank < len(keep):
                 kept_cols = [columns[i] for i in keep]
@@ -445,13 +519,23 @@ class Calibrator:
                             else 1.0 / self._template_rate(columns[i])
                             for i in dropped])
             pred = pred + A[:, dropped] @ inv
-        residual = float(np.sqrt(np.mean((pred - t) ** 2)))
+        err = pred - t
+        outliers: list[int] = []
+        if robust is not None:
+            # the residual headline describes the fit actually trusted:
+            # RMS over the inlier rows, with the flagged rows reported
+            outliers = [int(i) for i in np.flatnonzero(rw < 0.5)]
+            inliers = rw >= 0.5
+            if np.any(inliers):
+                err = err[inliers]
+        residual = float(np.sqrt(np.mean(err ** 2)))
         x_full = np.full(len(columns), np.nan)
         x_full[keep] = x
         report = FitReport(columns=columns, inverse_rates=x_full,
                            residual_rms_s=residual, samples=len(t),
                            date=date,
-                           dropped=[columns[i] for i in sorted(dropped)])
+                           dropped=[columns[i] for i in sorted(dropped)],
+                           robust=robust, outliers=outliers)
 
         rates = dict(self.template.transfer_rates)
         arith = dict(self.template.arith_rate)

@@ -38,6 +38,7 @@ from repro.measure.store import (
     StaleSampleError,
 )
 from repro.measure.campaign import (
+    CalibrationDriftError,
     CampaignResult,
     DEFAULT_FIT_MKS,
     fit_from_store,
@@ -56,7 +57,8 @@ from repro.measure.validate import (
 )
 
 __all__ = [
-    "CampaignResult", "DEFAULT_FIT_MKS", "Harness", "REPORT_SCHEMA",
+    "CalibrationDriftError", "CampaignResult", "DEFAULT_FIT_MKS",
+    "Harness", "REPORT_SCHEMA",
     "SAMPLE_SCHEMA", "Sample", "SampleStore", "StaleSampleError",
     "TimingResult", "ValidationReport", "ValidationRow",
     "blocked_loop_nest", "clock_overhead", "fit_from_store", "get_harness",

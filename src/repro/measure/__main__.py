@@ -55,14 +55,24 @@ def cmd_run(args) -> int:
 
 
 def cmd_fit(args) -> int:
-    spec, report = measure.fit_from_store(
-        args.store, _load_machine(args.template), name=args.name,
-        date=args.date, per_mk_arith=args.per_mk_arith,
-        register=args.register, manifest_dir=args.out,
-        on_nonpositive=args.on_nonpositive,
-        weighting=args.weighting, allow_stale=args.allow_stale)
+    try:
+        spec, report = measure.fit_from_store(
+            args.store, _load_machine(args.template), name=args.name,
+            date=args.date, per_mk_arith=args.per_mk_arith,
+            register=args.register, manifest_dir=args.out,
+            on_nonpositive=args.on_nonpositive,
+            weighting=args.weighting, robust=args.robust,
+            trim_fraction=args.trim_fraction, max_drift=args.max_drift,
+            allow_stale=args.allow_stale)
+    except measure.CalibrationDriftError as e:
+        print(json.dumps(e.as_dict(), indent=1, sort_keys=True))
+        print(str(e), file=sys.stderr)
+        return 1
     print(f"fitted {spec.name} from {report.samples} samples "
           f"(residual RMS {report.residual_rms_s:.3e}s)")
+    if report.robust:
+        print(f"  robust={report.robust}: {len(report.outliers)} sample(s) "
+              f"down-weighted {report.outliers}")
     import math as _math
     for col, x in zip(report.columns, report.inverse_rates):
         if _math.isnan(x):
@@ -154,6 +164,14 @@ def main(argv=None) -> int:
                    choices=["raise", "drop", "free"],
                    help="columns the measurements assign no cost: fail, "
                         "keep template rates, or mark the term free")
+    f.add_argument("--robust", default=None, choices=["huber", "trim"],
+                   help="outlier-resistant solve (corrupted field samples)")
+    f.add_argument("--trim-fraction", type=float, default=0.1,
+                   help="fraction --robust trim discards (default 0.1)")
+    f.add_argument("--max-drift", type=float, default=None,
+                   help="refuse to fit when the median measured/predicted "
+                        "ratio vs the template deviates from 1 by more "
+                        "than this (e.g. 0.25)")
     f.add_argument("--allow-stale", action="store_true")
     f.set_defaults(fn=cmd_fit)
 

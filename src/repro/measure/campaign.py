@@ -157,12 +157,45 @@ def run_campaign(grid: str, *, machine="host-cpu", harness="host-numpy",
                           samples=samples, sweep_stats=dict(res.stats))
 
 
+class CalibrationDriftError(RuntimeError):
+    """The store's measurements disagree with the baseline spec beyond the
+    drift threshold — the machine (or the store) is not what the spec says
+    it is, and fitting would silently bake the disagreement into fresh
+    rates.  Machine-readable via :meth:`as_dict`."""
+
+    def __init__(self, *, baseline: str, store: str, samples: int,
+                 median_ratio: float, drift: float, max_drift: float):
+        self.baseline = baseline
+        self.store = store
+        self.samples = samples
+        self.median_ratio = median_ratio
+        self.drift = drift
+        self.max_drift = max_drift
+        super().__init__(
+            f"{store}: measured times disagree with spec {baseline!r} — "
+            f"median measured/predicted = {median_ratio:.3f} "
+            f"(drift {drift:.1%} > max_drift {max_drift:.1%}).  Either the "
+            f"machine has drifted since the baseline was calibrated or the "
+            f"store holds someone else's samples; inspect with "
+            f"`python -m repro.measure validate`, then refit against a "
+            f"trusted baseline or raise max_drift to accept the shift")
+
+    def as_dict(self) -> dict:
+        return {"error": "calibration_drift", "baseline": self.baseline,
+                "store": self.store, "samples": self.samples,
+                "median_ratio": self.median_ratio, "drift": self.drift,
+                "max_drift": self.max_drift}
+
+
 def fit_from_store(store: SampleStore | str, template, *,
                    name: str | None = None, date: str | None = None,
                    policy: str | None = None, per_mk_arith: bool = False,
                    register: bool = False, manifest_dir: str | None = None,
                    on_nonpositive: str = "raise",
                    weighting: str = "relative",
+                   robust: str | None = None, trim_fraction: float = 0.1,
+                   max_drift: float | None = None,
+                   drift_baseline=None,
                    allow_stale: bool = False):
     """Fit ``template``'s rates from a store's measured samples.
 
@@ -174,6 +207,23 @@ def fit_from_store(store: SampleStore | str, template, *,
     (``weighting="relative"``) so MAPE over a wide-dynamic-range grid is
     what gets minimised; pass ``"absolute"`` for the plain solve.
     Returns ``(spec, FitReport)``.
+
+    ``robust``/``trim_fraction`` pass through to
+    :meth:`repro.machines.Calibrator.fit` — use ``robust="huber"`` (or
+    ``"trim"``) on field campaigns where a slice of the samples is
+    corrupted (thermal throttling, background load) so the outliers don't
+    drag every fitted rate.
+
+    ``max_drift`` arms the drift gate: before fitting, every sample is
+    priced by ``drift_baseline`` (default: the template itself) via
+    :func:`repro.measure.validate.predict_samples`, and if the *median*
+    measured/predicted ratio deviates from 1 by more than ``max_drift``
+    the fit refuses with :class:`CalibrationDriftError` — a systematic
+    disagreement with the registered spec means the samples describe a
+    different machine (or a drifted one) and should be inspected, not
+    silently absorbed.  The median is robust to the same outliers
+    ``robust=`` handles, so the two compose: outliers don't trip the gate,
+    wholesale drift does.
     """
     from repro.core.variants import MicroKernel, Variant
     from repro.machines import resolve
@@ -202,6 +252,22 @@ def fit_from_store(store: SampleStore | str, template, *,
         policy = policies[0]
     cal = Calibrator(spec, model="blis", variant=Variant(variants[0]),
                      policy=policy)
+    if max_drift is not None:
+        import statistics
+
+        from repro.measure.validate import predict_samples
+        base = resolve(drift_baseline) if drift_baseline is not None \
+            else spec
+        predicted = predict_samples(base, samples)
+        ratios = [s.seconds / p for s, p in zip(samples, predicted)
+                  if p > 0.0]
+        median_ratio = statistics.median(ratios)
+        drift = abs(median_ratio - 1.0)
+        if drift > max_drift:
+            raise CalibrationDriftError(
+                baseline=base.name, store=store.path, samples=len(ratios),
+                median_ratio=median_ratio, drift=drift,
+                max_drift=max_drift)
     probs = [s.problem for s in samples]
     mks = [MicroKernel(*map(int, s.micro_kernel.split("x")))
            for s in samples]
@@ -211,7 +277,7 @@ def fit_from_store(store: SampleStore | str, template, *,
         probs, seconds, micro_kernels=mks, date=date, name=name,
         register=register, manifest_dir=manifest_dir,
         per_mk_arith=per_mk_arith, on_nonpositive=on_nonpositive,
-        weighting=weighting,
+        weighting=weighting, robust=robust, trim_fraction=trim_fraction,
         extra_provenance={"measure": {
             "store": store.path, "harnesses": harnesses,
             "grids": sorted({s.meta.get("grid", "?") for s in samples}),

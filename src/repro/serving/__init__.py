@@ -12,6 +12,10 @@ planning.
   (``report.py``); ``ServingEngine.autoconfigure`` freezes an engine from
   the winning cell, and ``python -m repro.serving plan`` prints the report
   without instantiating a model.
+* ``resilience.py`` — overload primitives shared with the simulator:
+  shed-cause vocabulary, :class:`QueueFullError` +
+  :func:`retry_with_backoff` backpressure, and the
+  :class:`DegradationRung` ladder (see ``docs/RESILIENCE.md``).
 
 The engine and report modules import jax (and, for the engine, the model
 zoo); they load lazily so the config-only analytic surfaces
@@ -21,6 +25,11 @@ import importlib
 
 from repro.serving.buckets import PREFILL_BUCKETS, bucket_cover, bucket_len
 from repro.serving.footprint import Footprint, dtype_bytes, footprint
+from repro.serving.resilience import (SHED_CAUSES, SHED_DEADLINE_EXPIRED,
+                                      SHED_DEADLINE_UNMEETABLE,
+                                      SHED_QUEUE_FULL, DegradationRung,
+                                      QueueFullError, default_ladder,
+                                      retry_with_backoff)
 
 _LAZY = {
     "DrainTruncatedError": "repro.serving.engine",
@@ -34,10 +43,13 @@ _LAZY = {
 }
 
 __all__ = [
-    "CellRejection", "DeploymentOption", "DeploymentReport",
-    "DrainTruncatedError", "Footprint", "PREFILL_BUCKETS", "Request",
+    "CellRejection", "DegradationRung", "DeploymentOption",
+    "DeploymentReport", "DrainTruncatedError", "Footprint",
+    "PREFILL_BUCKETS", "QueueFullError", "Request", "SHED_CAUSES",
+    "SHED_DEADLINE_EXPIRED", "SHED_DEADLINE_UNMEETABLE", "SHED_QUEUE_FULL",
     "ServingEngine", "TRACE_SCHEMA", "bucket_cover", "bucket_len",
-    "dtype_bytes", "footprint", "plan_deployment",
+    "default_ladder", "dtype_bytes", "footprint", "plan_deployment",
+    "retry_with_backoff",
 ]
 
 

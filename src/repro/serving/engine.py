@@ -26,6 +26,10 @@ from repro.configs.base import ModelConfig
 from repro.models.common import split_params
 from repro.models.model import LM
 from repro.serving.buckets import bucket_len as _bucket
+from repro.serving.resilience import (SHED_DEADLINE_EXPIRED,
+                                      SHED_DEADLINE_UNMEETABLE,
+                                      DegradationRung, QueueFullError,
+                                      coerce_ladder)
 
 #: the event-trace format ``repro.simulate.replay`` consumes
 TRACE_SCHEMA = "repro.serving/trace-v1"
@@ -58,6 +62,9 @@ class Request:
     prompt: list            # token ids
     max_new_tokens: int = 16
     eos_id: int | None = None
+    # end-to-end latency budget in seconds from submission; None defers to
+    # the engine's default deadline (which may also be None: no deadline)
+    deadline_s: float | None = None
     generated: list = dataclasses.field(default_factory=list)
     # lifecycle timestamps (time.perf_counter seconds), stamped by the
     # engine: submission, slot admission, first decoded token, last token
@@ -65,6 +72,14 @@ class Request:
     t_admit: float | None = None
     t_first_token: float | None = None
     t_finish: float | None = None
+    # load shedding: when and why the engine rejected this request at
+    # admission time instead of serving it
+    t_shed: float | None = None
+    shed_cause: str | None = None
+
+    @property
+    def shed(self) -> bool:
+        return self.shed_cause is not None
 
     @property
     def done(self) -> bool:
@@ -103,12 +118,60 @@ class Request:
 
 
 class ServingEngine:
+    """See the module docstring for the serving model.
+
+    Resilience knobs (all off by default — a default-constructed engine
+    behaves bit-identically to one without them):
+
+    * ``deadline_s``: default end-to-end budget for requests that carry
+      none; enables deadline-aware admission — a queued request whose
+      deadline already passed (``deadline_expired``) or whose modeled
+      decode time no longer fits (``deadline_unmeetable``, using the
+      frozen-plan step estimate at the current slot cap) is *shed* at
+      admission instead of wasting a slot.
+    * ``queue_limit``: bounded queue; ``submit`` raises
+      :class:`~repro.serving.resilience.QueueFullError` (backpressure —
+      pair with :func:`~repro.serving.resilience.retry_with_backoff`).
+    * ``ladder`` / ``overload_patience``: graceful degradation — after
+      ``overload_patience`` consecutive steps with every allowed slot
+      busy *and* work still queued, the engine steps down one
+      :class:`~repro.serving.resilience.DegradationRung` (fewer decode
+      slots, then a modeled int8 KV cache); it steps back up after the
+      same number of calm (empty-queue) steps.  ``ladder=None`` with a
+      deadline or queue limit set installs the stock
+      :func:`~repro.serving.resilience.default_ladder`; ``ladder=()``
+      disables degradation outright.
+    """
+
     def __init__(self, lm: LM, params, *, max_batch: int = 4,
-                 max_len: int = 512):
+                 max_len: int = 512,
+                 deadline_s: float | None = None,
+                 queue_limit: int | None = None,
+                 ladder=None, overload_patience: int = 8):
         self.lm = lm
         self.params = params
         self.max_batch = max_batch
         self.max_len = max_len
+        if queue_limit is not None and queue_limit < 1:
+            raise ValueError(f"queue limit must be >= 1, got {queue_limit}")
+        if overload_patience < 1:
+            raise ValueError(f"overload patience must be >= 1, "
+                             f"got {overload_patience}")
+        self.deadline_s = deadline_s
+        self.queue_limit = queue_limit
+        resilient = deadline_s is not None or queue_limit is not None \
+            or ladder is not None
+        self.ladder: tuple[DegradationRung, ...] = \
+            coerce_ladder(ladder, max_batch) if resilient else ()
+        self.overload_patience = int(overload_patience)
+        self._rung = -1                  # -1 = nominal, else ladder index
+        self._overload_streak = 0
+        self._calm_streak = 0
+        self.degradations: list[dict] = []
+        self.shed_requests: list[Request] = []
+        self.rejected_submits = 0
+        self.truncated: dict | None = None
+        self._step_s_cache: dict[int, float] = {}
         caches, _ = split_params(lm.init_cache(max_batch, max_len))
         self.caches = caches
         self.slot_pos = [0] * max_batch          # next write position
@@ -160,6 +223,10 @@ class ServingEngine:
                       memory: bool = True,
                       kv_dtype: str | None = None,
                       slo=None, traffic=None,
+                      robust: bool = False, faults=None,
+                      deadline_s: float | None = None,
+                      queue_limit: int | None = None,
+                      ladder=None,
                       sim_policies=("greedy",),
                       sim_requests: int = 200,
                       sim_seed: int = 0) -> "ServingEngine":
@@ -209,6 +276,22 @@ class ServingEngine:
                 ``repro.simulate.Traffic``); None derives a Poisson
                 scenario from the report
                 (:func:`repro.simulate.default_traffic`).
+            robust: perturbation-robust SLO mode (requires ``slo``): the
+                cells are simulated *under a fault scenario* — by default
+                the ``"throttle20"`` duty-cycled thermal throttle — so
+                the pick is the cell that still attains the SLO when the
+                machine slows down, not the fair-weather winner.  Cells
+                that only fail under the faults are rejected with
+                ``fault_``-prefixed reasons.
+            faults: the fault scenario for robust mode (a
+                ``repro.simulate.FaultScenario``, registry name, or
+                dict); implies ``robust=True`` when given.
+            deadline_s / queue_limit / ladder: resilience knobs for the
+                *configured* engine (per-request deadline shedding,
+                bounded-queue backpressure, degradation ladder — see
+                ``resilience.py``); deadline and queue limit also apply
+                to the SLO-mode simulations so the pick accounts for
+                shedding.
             sim_policies / sim_requests / sim_seed: SLO-mode simulation
                 knobs — admission policies to consider, stream length per
                 cell, and the default-traffic seed.
@@ -231,21 +314,32 @@ class ServingEngine:
             lm.cfg, machines=machine, dtypes=dtypes, batches=batches,
             max_len=max_len, backend=backend, memory=memory,
             kv_dtype=kv_dtype)
+        if faults is not None:
+            robust = True
+        if robust and slo is None:
+            raise ValueError("autoconfigure(robust=True) needs an slo: "
+                             "robustness is defined as SLO attainment "
+                             "under perturbation")
         selection = None
         if slo is not None:
             from repro.machines import MachineSpec, expand_many
             from repro.simulate import evaluate_deployment
 
+            if robust and faults is None:
+                faults = "throttle20"
             overrides = {e.name: e for e in expand_many(machine)
                          if isinstance(e, MachineSpec)}
             selection = evaluate_deployment(
                 lm.cfg, report, slo=slo, traffic=traffic,
                 policies=sim_policies, requests=sim_requests,
-                seed=sim_seed, machines=overrides)
+                seed=sim_seed, machines=overrides, faults=faults,
+                deadline_s=deadline_s, queue_limit=queue_limit)
             best = selection.option
         else:
             best = report.select()
-        eng = cls(lm, params, max_batch=best.batch, max_len=max_len)
+        eng = cls(lm, params, max_batch=best.batch, max_len=max_len,
+                  deadline_s=deadline_s, queue_limit=queue_limit,
+                  ladder=ladder)
         eng.gemm_plans = [r.plan for r in best.rows]
         eng.deployment_report = report
         grid = [{
@@ -272,6 +366,7 @@ class ServingEngine:
                 "slo": selection.slo.as_dict(),
                 "policy": selection.policy,
                 "traffic": selection.traffic_name,
+                "faults": selection.faults,
                 "sim": selection.sim.summary(),
                 "rejected": [r.as_dict() for r in selection.rejections],
             }
@@ -304,9 +399,41 @@ class ServingEngine:
                 "ttft_s": stats([r.ttft_s for r in timed
                                  if r.ttft_s is not None] or [0.0]),
             }
+        resilience = self._resilience_report()
+        if resilience is not None:
+            report["resilience"] = resilience
         if self.autoconfig is not None:
             report["autoconfig"] = self.autoconfig
         return report
+
+    def _resilience_report(self) -> dict | None:
+        """Shed/expired/degraded accounting for ``perf_report()``; None
+        when no resilience feature is configured or ever fired (keeping
+        the default report shape unchanged)."""
+        engaged = (self.deadline_s is not None
+                   or self.queue_limit is not None or bool(self.ladder)
+                   or self.shed_requests or self.rejected_submits
+                   or self.truncated is not None)
+        if not engaged:
+            return None
+        causes: dict[str, int] = {}
+        for r in self.shed_requests:
+            causes[r.shed_cause] = causes.get(r.shed_cause, 0) + 1
+        out = {
+            "deadline_s": self.deadline_s,
+            "queue_limit": self.queue_limit,
+            "shed": {"count": len(self.shed_requests), "causes": causes},
+            "expired": causes.get(SHED_DEADLINE_EXPIRED, 0),
+            "rejected_submits": self.rejected_submits,
+            "degraded": {
+                "ladder": [r.as_dict() for r in self.ladder],
+                "rung": self.rung.name if self.rung else None,
+                "events": list(self.degradations),
+            },
+        }
+        if self.truncated is not None:
+            out["truncated"] = dict(self.truncated)
+        return out
 
     # -- jitted pieces --------------------------------------------------------
     def _decode_impl(self, params, caches, tokens, pos_vec, active):
@@ -350,22 +477,142 @@ class ServingEngine:
 
     # -- public API ---------------------------------------------------------
     def submit(self, req: Request) -> None:
+        """Enqueue one request.
+
+        Raises:
+            QueueFullError: the bounded queue (``queue_limit``) is full —
+                backpressure, not shedding: the request was never
+                accepted, the caller owns the retry (see
+                :func:`repro.serving.resilience.retry_with_backoff`).
+        """
         req.t_submit = time.perf_counter()
+        if self.queue_limit is not None \
+                and len(self.queue) >= self.queue_limit:
+            self.rejected_submits += 1
+            self.trace_events.append({
+                "type": "reject", "rid": req.rid, "t": req.t_submit,
+                "queue_depth": len(self.queue), "limit": self.queue_limit})
+            raise QueueFullError(limit=self.queue_limit,
+                                 depth=len(self.queue))
         self.queue.append(req)
-        self.trace_events.append({
+        event = {
             "type": "submit", "rid": req.rid, "t": req.t_submit,
             "prompt_len": len(req.prompt),
-            "max_new_tokens": req.max_new_tokens})
+            "max_new_tokens": req.max_new_tokens}
+        dl = self._deadline_for(req)
+        if dl is not None:
+            event["deadline_s"] = dl
+        self.trace_events.append(event)
 
     def _free_slots(self) -> list[int]:
         return [i for i, r in enumerate(self.slot_req) if r is None]
 
+    # -- resilience ---------------------------------------------------------
+    def _deadline_for(self, req: Request) -> float | None:
+        return req.deadline_s if req.deadline_s is not None \
+            else self.deadline_s
+
+    @property
+    def rung(self) -> DegradationRung | None:
+        """The active degradation rung (``None`` at nominal service)."""
+        return self.ladder[self._rung] if self._rung >= 0 else None
+
+    @property
+    def slot_cap(self) -> int:
+        """How many decode slots admission may fill right now."""
+        r = self.rung
+        return self.max_batch if r is None else r.decode_slots
+
+    def decision_step_s(self, cap: int | None = None) -> float:
+        """The modeled decode-step seconds the shedding decision prices
+        with: the frozen plans' prediction at the current slot cap
+        (re-planned per cap — a degraded engine admits against its own,
+        smaller, modeled step).  The full-batch value is exactly
+        ``perf_report()``'s ``predicted_gemm_seconds_per_step``."""
+        cap = self.slot_cap if cap is None else cap
+        if cap not in self._step_s_cache:
+            if cap == self.max_batch:
+                plans = self.gemm_plans
+            else:
+                plans = gemm_api.plan_model_gemms(
+                    self.lm.cfg, tokens=cap, backend="analytic-tpu")
+            self._step_s_cache[cap] = \
+                sum(p.predicted_seconds for p in plans)
+        return self._step_s_cache[cap]
+
+    def _shed_cause(self, req: Request, now: float) -> str | None:
+        """Why this queued request should be shed rather than admitted:
+        deadline already passed, or the modeled decode time alone
+        (``decision_step_s * max_new_tokens``; prefill excluded — the
+        simulator excludes it identically) no longer fits the budget."""
+        dl = self._deadline_for(req)
+        if dl is None:
+            return None
+        waited = now - req.t_submit
+        if waited >= dl:
+            return SHED_DEADLINE_EXPIRED
+        if waited + self.decision_step_s() * req.max_new_tokens > dl:
+            return SHED_DEADLINE_UNMEETABLE
+        return None
+
+    def _shed(self, req: Request, cause: str, now: float) -> None:
+        req.t_shed = now
+        req.shed_cause = cause
+        self.shed_requests.append(req)
+        self.trace_events.append({
+            "type": "shed", "rid": req.rid, "t": now, "cause": cause,
+            "waited_s": now - req.t_submit})
+
+    def _next_admissible(self) -> Request | None:
+        """Pop the queue until an admissible request surfaces, shedding
+        hopeless ones along the way (a shed never consumes the slot, so
+        an expired backlog drains in one step)."""
+        while self.queue:
+            req = self.queue.popleft()
+            now = time.perf_counter()
+            cause = self._shed_cause(req, now)
+            if cause is None:
+                return req
+            self._shed(req, cause, now)
+        return None
+
+    def _update_ladder(self, active: int) -> None:
+        """Degradation bookkeeping, once per step: sustained overload
+        (every allowed slot busy, work still queued) steps down a rung;
+        the same patience of calm steps back up."""
+        if not self.ladder:
+            return
+        overloaded = bool(self.queue) and active >= self.slot_cap
+        self._overload_streak = self._overload_streak + 1 if overloaded \
+            else 0
+        self._calm_streak = self._calm_streak + 1 if not self.queue else 0
+        if self._overload_streak >= self.overload_patience \
+                and self._rung < len(self.ladder) - 1:
+            self._rung += 1
+            self._overload_streak = 0
+            event = {"type": "degrade", "t": time.perf_counter(),
+                     "rung": self.rung.name,
+                     "decode_slots": self.rung.decode_slots,
+                     "kv_dtype": self.rung.kv_dtype}
+            self.trace_events.append(event)
+            self.degradations.append(dict(event))
+        elif self._calm_streak >= self.overload_patience and self._rung >= 0:
+            self._rung -= 1
+            self._calm_streak = 0
+            name = self.rung.name if self.rung else "nominal"
+            event = {"type": "restore", "t": time.perf_counter(),
+                     "rung": name, "decode_slots": self.slot_cap}
+            self.trace_events.append(event)
+            self.degradations.append(dict(event))
+
     def _admit(self) -> list[Request]:
         admitted = []
         for slot in self._free_slots():
-            if not self.queue:
+            if self.max_batch - len(self._free_slots()) >= self.slot_cap:
                 break
-            req = self.queue.popleft()
+            req = self._next_admissible()
+            if req is None:
+                break
             ptoks = req.prompt[-self.max_len + req.max_new_tokens:]
             # prefill all but the last prompt token; the first decode step
             # feeds prompt[-1] at position len-1 (cache then logits in one).
@@ -398,6 +645,7 @@ class ServingEngine:
         t_start = time.perf_counter()
         admitted = self._admit()
         active = [i for i, r in enumerate(self.slot_req) if r is not None]
+        self._update_ladder(len(active))
         if not active:
             return []
         tokens = jnp.zeros((self.max_batch, 1), jnp.int32)
@@ -442,26 +690,54 @@ class ServingEngine:
             "queue_depth": len(self.queue)})
         return out
 
-    def run_until_drained(self, max_steps: int = 10_000) -> list[Request]:
+    def drain(self, max_steps: int = 10_000, *,
+              on_truncate: str = "raise") -> list[Request]:
         """Step until queue and slots are empty.
 
+        Args:
+            max_steps: give up after this many steps.
+            on_truncate: ``"raise"`` (default) raises
+                :class:`DrainTruncatedError` on a partial drain;
+                ``"report"`` records the truncation (``self.truncated``,
+                surfaced by ``perf_report()``) and returns what *did*
+                finish — for CLI/benchmark paths that would otherwise
+                lose every measurement to the exception.
+
         Raises:
-            DrainTruncatedError: when ``max_steps`` elapse with requests
-                still queued or decoding — a partial drain must not pass
-                for a complete trace (see ``repro.simulate.replay``).
+            DrainTruncatedError: truncated and ``on_truncate="raise"`` —
+                a partial drain must not pass for a complete trace (see
+                ``repro.simulate.replay``).
         """
+        if on_truncate not in ("raise", "report"):
+            raise ValueError(f"on_truncate must be 'raise' or 'report', "
+                             f"got {on_truncate!r}")
         for _ in range(max_steps):
             self.step()
             if not self.queue and all(r is None for r in self.slot_req):
                 return self.finished
-        raise DrainTruncatedError(
-            finished=len(self.finished), queued=len(self.queue),
-            active=sum(r is not None for r in self.slot_req),
-            max_steps=max_steps)
+        state = dict(finished=len(self.finished), queued=len(self.queue),
+                     active=sum(r is not None for r in self.slot_req),
+                     max_steps=max_steps)
+        if on_truncate == "raise":
+            raise DrainTruncatedError(**state)
+        self.truncated = state
+        self.trace_events.append({
+            "type": "truncated", "t": time.perf_counter(), **state})
+        return self.finished
+
+    def run_until_drained(self, max_steps: int = 10_000, *,
+                          on_truncate: str = "raise") -> list[Request]:
+        """Alias of :meth:`drain` (the historical name)."""
+        return self.drain(max_steps, on_truncate=on_truncate)
 
     def trace_json(self) -> dict:
         """The engine's event trace (``repro.serving/trace-v1``) — feed it
         to :func:`repro.simulate.replay.replay` for sim-vs-real
-        validation, or persist it next to a measurement campaign."""
+        validation, or persist it next to a measurement campaign.
+        ``predicted_step_s`` is the frozen-plan decode-step estimate the
+        engine's shedding decisions price with; replay hands it to the
+        simulator so both sides decide on identical inputs."""
         return {"schema": TRACE_SCHEMA, "max_batch": self.max_batch,
-                "max_len": self.max_len, "events": list(self.trace_events)}
+                "max_len": self.max_len,
+                "predicted_step_s": self.decision_step_s(self.max_batch),
+                "events": list(self.trace_events)}

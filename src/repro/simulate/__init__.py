@@ -20,15 +20,21 @@ the same calibrated analytic cost models the planner ranks with.
   ``ServingEngine`` trace, measured- or model-priced, sim-vs-real
   validation (``replay.py``).
 * :class:`SLO` / :func:`evaluate_deployment` — SLO-driven
-  autoconfiguration over a deployment report (``autoconf.py``).
+  autoconfiguration over a deployment report (``autoconf.py``); pass
+  ``faults=`` for the perturbation-robust mode.
+* :class:`FaultScenario` / :data:`SCENARIOS` — seeded fault injection:
+  thermal-throttle windows, transient slot failures, arrival surges
+  (``faults.py``; see ``docs/RESILIENCE.md``).
 
 Everything here is config-only (no jax): full-size architectures simulate
 in milliseconds, so the CLI (``python -m repro.simulate run|replay|sweep``)
 is cheap enough for CI.
 """
 from repro.simulate.autoconf import (
+    FAULT_REJECT_PREFIX,
     REJECT_SLO_GOODPUT,
     REJECT_SLO_P99,
+    REJECT_SLO_SHED,
     REJECT_SLO_TTFT,
     REJECT_SLO_UNFINISHED,
     SLO,
@@ -37,6 +43,13 @@ from repro.simulate.autoconf import (
     evaluate_deployment,
 )
 from repro.simulate.engine import Event, Simulator
+from repro.simulate.faults import (
+    SCENARIOS,
+    ArrivalSurge,
+    FaultScenario,
+    ThrottleWindow,
+    throttle_scenario,
+)
 from repro.simulate.metrics import Metrics, SimReport, StepSample, percentile
 from repro.simulate.replay import (
     REPLAY_SCHEMA,
@@ -66,13 +79,17 @@ from repro.simulate.traffic import (
 )
 
 __all__ = [
-    "SLO", "BurstyTraffic", "Event", "LengthDist", "Metrics",
+    "SLO", "ArrivalSurge", "BurstyTraffic", "Event", "FAULT_REJECT_PREFIX",
+    "FaultScenario", "LengthDist", "Metrics",
     "POLICIES", "PoissonTraffic", "REJECT_SLO_GOODPUT", "REJECT_SLO_P99",
-    "REJECT_SLO_TTFT", "REJECT_SLO_UNFINISHED", "REPLAY_SCHEMA",
-    "ReplayReport", "ServiceModel", "SimReport", "SimRequest", "Simulator",
+    "REJECT_SLO_SHED", "REJECT_SLO_TTFT", "REJECT_SLO_UNFINISHED",
+    "REPLAY_SCHEMA",
+    "ReplayReport", "SCENARIOS", "ServiceModel", "SimReport", "SimRequest",
+    "Simulator",
     "SloSelection", "SlotServer", "StepSample", "TRACE_SCHEMA",
+    "ThrottleWindow",
     "TraceTraffic", "Traffic", "TrafficScenario", "UniformTraffic",
     "default_traffic", "evaluate_deployment", "load_trace", "make_traffic",
-    "percentile", "replay", "simulate_serving", "trace_requests",
-    "trace_traffic",
+    "percentile", "replay", "simulate_serving", "throttle_scenario",
+    "trace_requests", "trace_traffic",
 ]

@@ -56,11 +56,14 @@ def cmd_run(args) -> int:
     report = simulate_serving(
         service, traffic, max_batch=args.batch, max_len=args.max_len,
         policy=args.policy, requests=args.requests, horizon=args.horizon,
+        deadline_s=args.deadline, queue_limit=args.queue_limit,
+        faults=args.faults,
         config={"arch": cfg.name, "machine": args.machine,
                 "dtype": args.dtype})
     print(f"simulated {cfg.name} on {args.machine or 'native'} "
           f"dtype={args.dtype} batch={args.batch} policy={args.policy} "
-          f"under {traffic.name}")
+          f"under {traffic.name}"
+          + (f" faults={args.faults}" if args.faults else ""))
     print(report.table())
     if args.json:
         report.save(args.json)
@@ -100,17 +103,20 @@ def cmd_sweep(args) -> int:
         print("no memory-feasible cells to simulate", file=sys.stderr)
         return 1
     slo = SLO(p99_latency_s=args.slo_p99, p95_ttft_s=args.slo_ttft,
-              min_goodput_tps=args.slo_goodput)
+              min_goodput_tps=args.slo_goodput,
+              max_shed_fraction=args.slo_shed)
     traffic = _traffic(args) if args.rate is not None else None
     try:
         sel = evaluate_deployment(
             cfg, report, slo=slo, traffic=traffic, policies=args.policies,
-            requests=args.requests, seed=args.seed)
+            requests=args.requests, seed=args.seed, faults=args.faults,
+            deadline_s=args.deadline, queue_limit=args.queue_limit)
     except ValueError as e:
         print(e, file=sys.stderr)
         return 1
     print(f"SLO sweep for {cfg.name} under {sel.traffic_name} "
-          f"({len(sel.results)} cells, {len(sel.rejections)} rejected)")
+          + (f"with faults={sel.faults} " if sel.faults else "")
+          + f"({len(sel.results)} cells, {len(sel.rejections)} rejected)")
     hdr = (f"{'machine':<18}{'dtype':<7}{'batch':>6}  {'policy':<13}"
            f"{'p99 lat':>10}{'p95 ttft':>10}{'goodput':>10}  slo")
     print(hdr)
@@ -148,6 +154,18 @@ def _traffic_args(p, rate_default):
     p.add_argument("--seed", type=int, default=0)
 
 
+def _resilience_args(p):
+    from repro.simulate.faults import SCENARIOS
+    p.add_argument("--faults", default=None,
+                   help="named fault scenario to inject: "
+                        + "|".join(sorted(SCENARIOS)))
+    p.add_argument("--deadline", type=float, default=None, dest="deadline",
+                   help="per-request latency deadline, seconds "
+                        "(arms deadline-aware shedding)")
+    p.add_argument("--queue-limit", type=int, default=None,
+                   help="bounded queue depth (overflow is shed)")
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(prog="python -m repro.simulate")
     sub = ap.add_subparsers(dest="cmd", required=True)
@@ -166,6 +184,7 @@ def main(argv=None) -> int:
     p.add_argument("--smoke", action="store_true")
     p.add_argument("--json", default=None)
     _traffic_args(p, rate_default=100.0)
+    _resilience_args(p)
     p.set_defaults(fn=cmd_run)
 
     p = sub.add_parser("replay", help="re-enact a recorded engine trace")
@@ -200,9 +219,12 @@ def main(argv=None) -> int:
                    help="p95 time-to-first-token bound, seconds")
     p.add_argument("--slo-goodput", type=float, default=None,
                    help="minimum completed tokens/second")
+    p.add_argument("--slo-shed", type=float, default=None,
+                   help="maximum tolerated shed fraction (0..1)")
     p.add_argument("--smoke", action="store_true")
     p.add_argument("--json", default=None)
     _traffic_args(p, rate_default=None)
+    _resilience_args(p)
     p.set_defaults(fn=cmd_sweep)
 
     args = ap.parse_args(argv)

@@ -31,6 +31,12 @@ REJECT_SLO_P99 = "slo_p99_latency_exceeded"
 REJECT_SLO_TTFT = "slo_p95_ttft_exceeded"
 REJECT_SLO_GOODPUT = "slo_goodput_below_min"
 REJECT_SLO_UNFINISHED = "slo_unfinished_requests"
+REJECT_SLO_SHED = "slo_shed_above_max"
+
+#: rejections recorded under a fault scenario carry this prefix, so a
+#: fair-weather-feasible cell that dies under throttle is distinguishable
+#: (``fault_slo_p99_latency_exceeded`` vs ``slo_p99_latency_exceeded``)
+FAULT_REJECT_PREFIX = "fault_"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -41,13 +47,17 @@ class SLO:
     request latency at the 99th percentile; ``p95_ttft_s`` bounds time to
     first token at the 95th; ``min_goodput_tps`` floors completed
     tokens/second; ``require_finished`` rejects runs that left requests
-    in flight (an unstable queue never meets any tail bound honestly).
+    in flight (an unstable queue never meets any tail bound honestly);
+    ``max_shed_fraction`` caps load shedding — without it, a deadline-
+    shedding run could trivially "attain" any latency bound by serving
+    almost nothing.
     """
 
     p99_latency_s: float | None = None
     p95_ttft_s: float | None = None
     min_goodput_tps: float | None = None
     require_finished: bool = True
+    max_shed_fraction: float | None = None
 
     @classmethod
     def coerce(cls, spec: Any) -> "SLO":
@@ -74,6 +84,10 @@ class SLO:
 
         if self.require_finished and report.requests["unfinished"]:
             add(REJECT_SLO_UNFINISHED, report.requests["unfinished"], 0)
+        if self.max_shed_fraction is not None \
+                and report.shed_fraction > self.max_shed_fraction:
+            add(REJECT_SLO_SHED, report.shed_fraction,
+                self.max_shed_fraction)
         if not report.requests["finished"]:
             return out
         if self.p99_latency_s is not None \
@@ -119,12 +133,14 @@ class SloSelection:
     slo: SLO
     results: list[dict]                 # one summary per (option, policy)
     rejections: list                    # CellRejection, SLO-reason coded
+    faults: str | None = None           # fault scenario the cells ran under
 
     def as_dict(self) -> dict:
         return {
             "machine": self.option.machine, "dtype": self.option.dtype,
             "batch": self.option.batch, "policy": self.policy,
             "traffic": self.traffic_name, "slo": self.slo.as_dict(),
+            "faults": self.faults,
             "sim": self.sim.summary(),
             "results": list(self.results),
             "rejected": [r.as_dict() for r in self.rejections],
@@ -135,6 +151,8 @@ def evaluate_deployment(cfg, report, *, slo, traffic: Traffic | None = None,
                         policies: Sequence[str] = ("greedy",),
                         requests: int = 200, seed: int = 0,
                         machines: Mapping[str, Any] | None = None,
+                        faults=None, deadline_s: float | None = None,
+                        queue_limit: int | None = None,
                         attach: bool = True) -> SloSelection:
     """Simulate every feasible option of a deployment report under one
     traffic scenario and select by SLO attainment.
@@ -152,6 +170,16 @@ def evaluate_deployment(cfg, report, *, slo, traffic: Traffic | None = None,
             its own seed).
         machines: optional ``name -> MachineSpec`` overrides for options
             planned on unregistered (derived) specs.
+        faults: a :class:`~repro.simulate.faults.FaultScenario` (or
+            registry name / dict): every cell is simulated *under the
+            perturbation* — the robust mode.  Cells that only fail under
+            the faults are rejected with ``fault_``-prefixed reasons
+            (``fault_slo_p99_latency_exceeded`` ...), so the report
+            distinguishes fair-weather losers from fault casualties.
+        deadline_s / queue_limit: optional shedding knobs forwarded to the
+            simulated server (pair ``deadline_s`` with
+            ``slo.max_shed_fraction`` so shedding cannot trivially attain
+            the tail bound).
         attach: annotate the report in place — sim summaries onto the
             options, SLO rejections into ``report.rejected``, and the
             whole evaluation under ``report.slo``.
@@ -168,6 +196,7 @@ def evaluate_deployment(cfg, report, *, slo, traffic: Traffic | None = None,
             ``report.rejected`` when ``attach`` is set.
     """
     from repro.serving.report import CellRejection
+    from repro.simulate.faults import FaultScenario
 
     slo = SLO.coerce(slo)
     for p in policies:
@@ -177,6 +206,8 @@ def evaluate_deployment(cfg, report, *, slo, traffic: Traffic | None = None,
     if traffic is None:
         traffic = default_traffic(report, seed=seed)
     machines = dict(machines or {})
+    scenario = FaultScenario.coerce(faults) if faults is not None else None
+    prefix = FAULT_REJECT_PREFIX if scenario is not None else ""
 
     services: dict[tuple, ServiceModel] = {}
     results: list[dict] = []
@@ -195,6 +226,8 @@ def evaluate_deployment(cfg, report, *, slo, traffic: Traffic | None = None,
             rep = simulate_serving(
                 services[key], traffic, max_batch=o.batch,
                 max_len=report.max_len, policy=policy, requests=requests,
+                deadline_s=deadline_s, queue_limit=queue_limit,
+                faults=scenario,
                 config={"machine": o.machine, "dtype": o.dtype})
             violations = slo.check(rep)
             row = {"machine": o.machine, "dtype": o.dtype,
@@ -205,6 +238,9 @@ def evaluate_deployment(cfg, report, *, slo, traffic: Traffic | None = None,
                    "p95_ttft_s": rep.ttft.get("p95"),
                    "slo_attained": not violations,
                    "violations": violations}
+            if scenario is not None:
+                row["faults"] = scenario.name
+                row["shed_fraction"] = rep.shed_fraction
             results.append(row)
             sims.setdefault(i, {})[policy] = {
                 "goodput_tps": rep.goodput_tps,
@@ -213,10 +249,12 @@ def evaluate_deployment(cfg, report, *, slo, traffic: Traffic | None = None,
             if violations:
                 rejections.append(CellRejection(
                     machine=o.machine, dtype=o.dtype, batch=o.batch,
-                    reason=violations[0]["reason"],
+                    reason=prefix + violations[0]["reason"],
                     footprint_bytes=o.footprint.total_bytes,
                     budget_bytes=o.budget_bytes,
                     detail={"policy": policy, "traffic": traffic.name,
+                            **({"faults": scenario.name}
+                               if scenario is not None else {}),
                             "violations": violations}))
             else:
                 candidates.append((o, policy, rep))
@@ -228,13 +266,15 @@ def evaluate_deployment(cfg, report, *, slo, traffic: Traffic | None = None,
         report.rejected.extend(rejections)
 
     if not candidates:
+        under = traffic.name + (f" + faults {scenario.name}"
+                                if scenario is not None else "")
         why = "; ".join(sorted({
             f"{r['machine']}/{r['dtype']}/b{r['batch']}/{r['policy']}: "
             + ",".join(v["reason"] for v in r["violations"])
             for r in results if r["violations"]})) or "no options simulated"
         raise ValueError(
             f"no (machine, dtype, batch, policy) cell attains the SLO "
-            f"{slo.as_dict()} under {traffic.name}: {why}")
+            f"{slo.as_dict()} under {under}: {why}")
 
     native = [c for c in candidates if c[0].dtype == report.native_dtype]
     pool = native or candidates
@@ -243,10 +283,12 @@ def evaluate_deployment(cfg, report, *, slo, traffic: Traffic | None = None,
                              c[0].dtype, c[1]))
     selection = SloSelection(
         option=option, policy=policy, sim=rep, traffic_name=traffic.name,
-        slo=slo, results=results, rejections=rejections)
+        slo=slo, results=results, rejections=rejections,
+        faults=scenario.name if scenario is not None else None)
     if attach:
         report.slo = {
             "slo": slo.as_dict(), "traffic": traffic.name,
+            "faults": scenario.name if scenario is not None else None,
             "requests": requests, "policies": list(policies),
             "selected": {"machine": option.machine, "dtype": option.dtype,
                          "batch": option.batch, "policy": policy,

@@ -58,10 +58,27 @@ class RequestRecord:
     first_token_s: float | None = None
     finish_s: float | None = None
     tokens: int = 0
+    deadline_s: float | None = None
+    shed_s: float | None = None
+    shed_cause: str | None = None
 
     @property
     def done(self) -> bool:
         return self.finish_s is not None
+
+    @property
+    def shed(self) -> bool:
+        return self.shed_cause is not None
+
+    @property
+    def deadline_met(self) -> bool | None:
+        """Whether the finish beat the deadline; ``None`` without one (or
+        without a finish — a shed request never met its deadline)."""
+        if self.deadline_s is None:
+            return None
+        if self.finish_s is None:
+            return False if self.shed else None
+        return (self.finish_s - self.arrival_s) <= self.deadline_s
 
     @property
     def wait_s(self) -> float:
@@ -105,10 +122,23 @@ class Metrics:
 
     # -- lifecycle hooks ----------------------------------------------------
     def on_arrival(self, rid: int, t: float, prompt_len: int,
-                   decode_len: int) -> None:
+                   decode_len: int, deadline_s: float | None = None) -> None:
         self.records[rid] = RequestRecord(
             rid=rid, arrival_s=t, prompt_len=prompt_len,
-            decode_len=decode_len)
+            decode_len=decode_len, deadline_s=deadline_s)
+
+    def on_shed(self, rid: int, t: float, cause: str) -> None:
+        r = self.records[rid]
+        r.shed_s = t
+        r.shed_cause = cause
+
+    def on_requeue(self, rid: int, t: float) -> None:
+        """A slot failure evicted this request: its generated prefix is
+        lost (never delivered), so the token/TTFT bookkeeping restarts."""
+        r = self.records[rid]
+        r.tokens = 0
+        r.first_token_s = None
+        r.admit_s = None
 
     def on_admit(self, rid: int, t: float) -> None:
         self.records[rid].admit_s = t
@@ -128,17 +158,34 @@ class Metrics:
 
     # -- reduction ----------------------------------------------------------
     def report(self, *, config: Mapping[str, Any] | None = None,
-               max_batch: int | None = None) -> "SimReport":
+               max_batch: int | None = None,
+               faults: Mapping[str, Any] | None = None) -> "SimReport":
         done = [r for r in self.records.values() if r.done]
+        shed = [r for r in self.records.values() if r.shed]
         busy = sum(s.dt for s in self.steps)
         span = max((r.finish_s for r in done), default=0.0)
         util = (sum(s.active * s.dt for s in self.steps)
                 / (busy * max_batch)) if busy and max_batch else 0.0
         tokens = sum(r.tokens for r in done)
+        causes: dict[str, int] = {}
+        for r in shed:
+            causes[r.shed_cause] = causes.get(r.shed_cause, 0) + 1
+        with_deadline = [r for r in self.records.values()
+                         if r.deadline_s is not None]
+        deadline = {}
+        if with_deadline:
+            met = sum(1 for r in with_deadline if r.deadline_met)
+            deadline = {"requests": len(with_deadline), "met": met,
+                        "violated": len(with_deadline) - met}
         return SimReport(
             config=dict(config or {}),
             requests={"submitted": len(self.records), "finished": len(done),
-                      "unfinished": len(self.records) - len(done)},
+                      "shed": len(shed),
+                      "unfinished":
+                          len(self.records) - len(done) - len(shed)},
+            shed={"count": len(shed), "causes": causes} if shed else {},
+            deadline=deadline,
+            faults=dict(faults or {}),
             latency=_dist(r.latency_s for r in done),
             ttft=_dist(r.ttft_s for r in done),
             wait=_dist(r.wait_s for r in done),
@@ -175,12 +222,25 @@ class SimReport:
     steps: int
     busy_s: float
     span_s: float
+    shed: dict = dataclasses.field(default_factory=dict)
+    deadline: dict = dataclasses.field(default_factory=dict)
+    faults: dict = dataclasses.field(default_factory=dict)
     finish_order: list[int] = dataclasses.field(default_factory=list)
     per_request: list[dict] = dataclasses.field(default_factory=list)
 
     @property
     def p99_latency_s(self) -> float:
         return self.latency.get("p99", float("nan"))
+
+    @property
+    def shed_count(self) -> int:
+        return self.requests.get("shed", self.shed.get("count", 0))
+
+    @property
+    def shed_fraction(self) -> float:
+        """Shed requests as a fraction of everything submitted."""
+        n = self.requests.get("submitted", 0)
+        return (self.shed_count / n) if n else 0.0
 
     @property
     def finite(self) -> bool:
@@ -198,6 +258,8 @@ class SimReport:
             "queue": self.queue,
             "slot_utilization": self.slot_utilization,
             "steps": self.steps, "busy_s": self.busy_s, "span_s": self.span_s,
+            "shed": self.shed, "deadline": self.deadline,
+            "faults": self.faults,
         }
 
     def table(self) -> str:
@@ -222,6 +284,21 @@ class SimReport:
                     f"  p99 {d['p99']:.4g}s  max {d['max']:.4g}s")
         lines.append(f"  queue      mean depth {self.queue['mean_depth']:.2f}"
                      f", max {self.queue['max_depth']}")
+        if self.shed.get("count"):
+            causes = ", ".join(f"{k}={v}" for k, v in
+                               sorted(self.shed["causes"].items()))
+            lines.append(f"  shed       {self.shed['count']} "
+                         f"({self.shed_fraction:.1%}): {causes}")
+        if self.deadline:
+            lines.append(f"  deadline   {self.deadline['met']}/"
+                         f"{self.deadline['requests']} met "
+                         f"({self.deadline['violated']} violated)")
+        if self.faults:
+            bits = ", ".join(f"{k}={v}" for k, v in
+                             sorted(self.faults.items())
+                             if not isinstance(v, (dict, list)))
+            lines.append(f"  faults     {bits}" if bits else
+                         f"  faults     {self.faults.get('scenario', '?')}")
         return "\n".join(lines)
 
     def to_json(self) -> dict:

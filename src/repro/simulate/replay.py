@@ -69,9 +69,12 @@ def trace_requests(trace: Mapping[str, Any]) -> list[SimRequest]:
         raise ValueError("trace contains no submit events")
     t0 = min(e["t"] for e in submits)
     generated = {e["rid"]: e["tokens"] for e in _events(trace, "finish")}
+    # a shed request has no finish event; its decode_len stays at
+    # max_new_tokens — exactly what the engine's shedding decision priced
     return [SimRequest(
         rid=e["rid"], arrival_s=e["t"] - t0, prompt_len=e["prompt_len"],
         decode_len=generated.get(e["rid"], e["max_new_tokens"]),
+        deadline_s=e.get("deadline_s"),
     ) for e in sorted(submits, key=lambda e: (e["t"], e["rid"]))]
 
 
@@ -130,10 +133,19 @@ class ReplayReport:
     steps_real: int
     steps_sim: int
     config: dict = dataclasses.field(default_factory=dict)
+    # rid -> shed cause, both sides (empty when the trace has no deadlines)
+    real_shed: dict = dataclasses.field(default_factory=dict)
+    sim_shed: dict = dataclasses.field(default_factory=dict)
 
     @property
     def order_match(self) -> bool:
         return self.real_order == self.sim_order
+
+    @property
+    def shed_match(self) -> bool:
+        """Did the simulator shed exactly the requests the real engine
+        shed (by rid)?  The headline of resilience replay validation."""
+        return set(self.real_shed) == set(self.sim_shed)
 
     @property
     def steps_match(self) -> bool:
@@ -157,6 +169,10 @@ class ReplayReport:
             "steps_real": self.steps_real, "steps_sim": self.steps_sim,
             "mape_pct": self.mape, "config": self.config,
         }
+        if self.real_shed or self.sim_shed:
+            out["shed"] = {"match": self.shed_match,
+                           "real": dict(self.real_shed),
+                           "sim": dict(self.sim_shed)}
         if self.rows:
             w = self.worst
             out["worst"] = {"rid": w.rid, "ape_pct": 100.0 * w.ape,
@@ -225,7 +241,8 @@ def replay(trace: Mapping[str, Any], service: ServiceModel | None = None, *,
     sim = Simulator(seed=0)
     server = SlotServer(sim, svc, max_batch=trace["max_batch"],
                         max_len=trace["max_len"], policy=policy,
-                        start_at=start_at, step_times=step_times)
+                        start_at=start_at, step_times=step_times,
+                        decision_step_s=trace.get("predicted_step_s"))
     server.drive(reqs)
     sim.run()
 
@@ -249,9 +266,13 @@ def replay(trace: Mapping[str, Any], service: ServiceModel | None = None, *,
     # the event list is chronological; same-step finishes keep slot order
     # on both sides, so the raw sequence IS the completion order
     real_order = [e["rid"] for e in _events(trace, "finish")]
+    real_shed = {e["rid"]: e["cause"] for e in _events(trace, "shed")}
+    sim_shed = {r.rid: r.shed_cause
+                for r in server.metrics.records.values() if r.shed}
     return ReplayReport(
         mode=mode, rows=rows, real_order=real_order,
         sim_order=list(server.metrics.finish_order),
         steps_real=len(steps), steps_sim=server.steps_run,
+        real_shed=real_shed, sim_shed=sim_shed,
         config={"max_batch": trace["max_batch"],
                 "max_len": trace["max_len"], "policy": policy})

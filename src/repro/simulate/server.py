@@ -28,7 +28,11 @@ import functools
 from typing import Any, Iterable, Iterator, Mapping
 
 from repro.serving.buckets import PREFILL_BUCKETS, bucket_cover, bucket_len
+from repro.serving.resilience import (SHED_DEADLINE_EXPIRED,
+                                      SHED_DEADLINE_UNMEETABLE,
+                                      SHED_QUEUE_FULL)
 from repro.simulate.engine import Simulator
+from repro.simulate.faults import FaultScenario
 from repro.simulate.metrics import Metrics, SimReport, StepSample
 from repro.simulate.traffic import SimRequest, Traffic
 
@@ -122,16 +126,38 @@ class SlotServer:
             given, step ``k`` costs the ``k``-th entry instead of the
             analytic price (measured-service replay).  Falls back to the
             model if the iterator runs dry.
+        deadline_s: default end-to-end latency budget applied to requests
+            that carry none; ``None`` disables deadline shedding.
+        queue_limit: bounded-queue depth; an arrival that finds the queue
+            full is *dropped* and recorded as a ``queue_full`` shed (open
+            loop: arrivals cannot be asked to wait, unlike the real
+            engine's ``QueueFullError`` backpressure).
+        decision_step_s: the per-step cost the *shedding decision* uses
+            when modeling whether a deadline is meetable (defaults to the
+            service model's decode step).  Replay passes the real
+            engine's recorded planning estimate so both sides decide on
+            identical inputs.
+        faults: a :class:`~repro.simulate.faults.FaultScenario` (or name /
+            dict) perturbing this run: throttle windows scale step costs,
+            slot failures evict and re-queue a victim at step boundaries,
+            surges are extra arrivals the *caller* drives (see
+            :func:`simulate_serving`).
     """
 
     def __init__(self, sim: Simulator, service: ServiceModel, *,
                  max_batch: int, max_len: int = 512,
                  policy: str = "greedy", metrics: Metrics | None = None,
                  start_at: float | None = None,
-                 step_times: Iterable[float] | None = None):
+                 step_times: Iterable[float] | None = None,
+                 deadline_s: float | None = None,
+                 queue_limit: int | None = None,
+                 decision_step_s: float | None = None,
+                 faults: FaultScenario | str | dict | None = None):
         if policy not in POLICIES:
             raise ValueError(f"unknown admission policy {policy!r}; "
                              f"have {POLICIES}")
+        if queue_limit is not None and queue_limit < 1:
+            raise ValueError(f"queue limit must be >= 1, got {queue_limit}")
         self.sim = sim
         self.service = service
         self.max_batch = int(max_batch)
@@ -141,18 +167,43 @@ class SlotServer:
         self.queue: collections.deque[_Live] = collections.deque()
         self.slots: list[_Live | None] = [None] * self.max_batch
         self.steps_run = 0
+        self.deadline_s = deadline_s
+        self.queue_limit = queue_limit
+        self.decision_step_s = float(
+            service.decode_step_s if decision_step_s is None
+            else decision_step_s)
+        self.faults = FaultScenario.coerce(faults) if faults is not None \
+            else None
+        self.slot_failures = 0
+        self.throttled_steps = 0
         self._stepping = False
         self._started = start_at is None
         self._step_times: Iterator[float] | None = \
             iter(step_times) if step_times is not None else None
+        # slot failures materialise at step boundaries: track the next
+        # scheduled failure and process every one that fell inside a step
+        # when the step completes (the victim loses that step's work)
+        self._failures = self.faults.failures() if self.faults else iter(())
+        nxt = next(self._failures, None)
+        self._next_fail: tuple[float, float] | None = \
+            (nxt[0], nxt[1]) if nxt else None
         if start_at is not None:
             sim.schedule_at(start_at, self._start)
 
     # -- driving ------------------------------------------------------------
+    def _deadline_for(self, req: SimRequest) -> float | None:
+        return req.deadline_s if req.deadline_s is not None \
+            else self.deadline_s
+
     def offer(self, req: SimRequest) -> None:
         """Accept one request (call at its arrival time)."""
         self.metrics.on_arrival(req.rid, self.sim.now, req.prompt_len,
-                                req.decode_len)
+                                req.decode_len,
+                                deadline_s=self._deadline_for(req))
+        if self.queue_limit is not None \
+                and len(self.queue) >= self.queue_limit:
+            self.metrics.on_shed(req.rid, self.sim.now, SHED_QUEUE_FULL)
+            return
         self.queue.append(_Live(req=req))
         self._kick()
 
@@ -176,6 +227,33 @@ class SlotServer:
     def _free(self) -> list[int]:
         return [i for i, s in enumerate(self.slots) if s is None]
 
+    def _shed_cause(self, req: SimRequest) -> str | None:
+        """Why this queued request should be shed instead of admitted
+        right now; ``None`` when it is admissible.  The decision uses the
+        same two inputs the real engine uses: time already waited and the
+        modeled decode time at ``decision_step_s`` (prefill excluded —
+        both sides must exclude it identically)."""
+        dl = self._deadline_for(req)
+        if dl is None:
+            return None
+        waited = self.sim.now - req.arrival_s
+        if waited >= dl:
+            return SHED_DEADLINE_EXPIRED
+        if waited + self.decision_step_s * req.decode_len > dl:
+            return SHED_DEADLINE_UNMEETABLE
+        return None
+
+    def _next_admissible(self) -> _Live | None:
+        """Pop the queue until an admissible request surfaces, shedding
+        the hopeless ones along the way (a shed never consumes a slot)."""
+        while self.queue:
+            live = self.queue.popleft()
+            cause = self._shed_cause(live.req)
+            if cause is None:
+                return live
+            self.metrics.on_shed(live.req.rid, self.sim.now, cause)
+        return None
+
     def _admit(self) -> list[_Live]:
         free = self._free()
         if self.policy == "one-per-step":
@@ -184,9 +262,9 @@ class SlotServer:
             free = []
         admitted = []
         for slot in free:
-            if not self.queue:
+            live = self._next_admissible()
+            if live is None:
                 break
-            live = self.queue.popleft()
             self.slots[slot] = live
             self.metrics.on_admit(live.req.rid, self.sim.now)
             admitted.append(live)
@@ -212,13 +290,45 @@ class SlotServer:
             cost = self.service.decode_step_s + sum(
                 self.service.prefill_seconds(self._prefix_len(a.req))
                 for a in admitted)
+        # thermal-throttle windows scale whatever this step costs,
+        # sampled at step start (DVFS changes between steps, not within)
+        if self.faults is not None:
+            scale = self.faults.service_scale(t0)
+            if scale != 1.0:
+                cost *= scale
+                self.throttled_steps += 1
         sample = StepSample(t=t0, dt=cost, active=len(active),
                             admitted=len(admitted),
                             queue_depth=len(self.queue))
         self.sim.schedule(cost, functools.partial(self._finish_step, sample))
 
+    def _process_failures(self, now: float) -> None:
+        """Evict the victim of every slot failure that fell inside the
+        step that just completed.  The victim loses the step's work
+        entirely — tokens reset (its KV cache is gone, re-admission pays
+        prefill again) — and re-queues at the *front*, keeping its
+        original arrival time so the latency hit lands in the tail."""
+        while self._next_fail is not None and self._next_fail[0] <= now:
+            u = self._next_fail[1]
+            occupied = [i for i, s in enumerate(self.slots) if s is not None]
+            if occupied:
+                victim_slot = occupied[min(int(u * len(occupied)),
+                                           len(occupied) - 1)]
+                live = self.slots[victim_slot]
+                self.slots[victim_slot] = None
+                live.tokens = 0
+                self.queue.appendleft(live)
+                self.metrics.on_requeue(live.req.rid, now)
+                self.slot_failures += 1
+            # advance to the next scheduled failure (an idle-slot failure
+            # is a no-op but still consumes its schedule entry)
+            nxt = next(self._failures, None)
+            self._next_fail = (self._next_fail[0] + nxt[0], nxt[1]) \
+                if nxt else None
+
     def _finish_step(self, sample: StepSample) -> None:
         now = self.sim.now
+        self._process_failures(now)
         for i, live in enumerate(self.slots):
             if live is None:
                 continue
@@ -237,6 +347,10 @@ def simulate_serving(service: ServiceModel, traffic: Traffic, *,
                      max_batch: int, max_len: int = 512,
                      policy: str = "greedy", requests: int = 100,
                      seed: int | None = None, horizon: float | None = None,
+                     deadline_s: float | None = None,
+                     queue_limit: int | None = None,
+                     decision_step_s: float | None = None,
+                     faults: FaultScenario | str | dict | None = None,
                      config: Mapping[str, Any] | None = None) -> SimReport:
     """One full run: traffic -> slot server -> metrics report.
 
@@ -249,20 +363,43 @@ def simulate_serving(service: ServiceModel, traffic: Traffic, *,
             future stochastic modules).
         horizon: optional sim-time cutoff — requests still in flight are
             reported as ``unfinished``.
+        deadline_s / queue_limit / decision_step_s: resilience knobs, see
+            :class:`SlotServer`.
+        faults: a :class:`~repro.simulate.faults.FaultScenario` (or
+            registry name / dict) perturbing the run; its surges are
+            driven on top of the nominal traffic and the report's
+            ``faults`` block records what fired.
         config: extra identity keys merged into the report's ``config``.
 
     Returns:
         A :class:`~repro.simulate.metrics.SimReport` for the run.
     """
+    scenario = FaultScenario.coerce(faults) if faults is not None else None
     sim = Simulator(seed=traffic.seed if seed is None else seed,
                     horizon=horizon)
     server = SlotServer(sim, service, max_batch=max_batch, max_len=max_len,
-                        policy=policy)
+                        policy=policy, deadline_s=deadline_s,
+                        queue_limit=queue_limit,
+                        decision_step_s=decision_step_s, faults=scenario)
     server.drive(traffic.requests(requests))
+    surge = scenario.surge_requests() if scenario is not None else []
+    if surge:
+        server.drive(surge)
     sim.run()
     full = {"traffic": traffic.name, "batch": max_batch, "policy": policy,
             "max_len": max_len, "requests": requests,
             "seed": traffic.seed if seed is None else seed,
+            **({"deadline_s": deadline_s} if deadline_s is not None else {}),
+            **({"queue_limit": queue_limit} if queue_limit is not None
+               else {}),
+            **({"faults": scenario.name} if scenario is not None else {}),
             **dict(config or {})}
-    report = server.metrics.report(config=full, max_batch=max_batch)
+    fault_info = {}
+    if scenario is not None:
+        fault_info = {"scenario": scenario.name,
+                      "slot_failures": server.slot_failures,
+                      "throttled_steps": server.throttled_steps,
+                      "surge_requests": len(surge)}
+    report = server.metrics.report(config=full, max_batch=max_batch,
+                                   faults=fault_info)
     return report

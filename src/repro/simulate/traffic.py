@@ -37,12 +37,15 @@ from repro.serving.buckets import PREFILL_BUCKETS, bucket_len
 
 @dataclasses.dataclass(frozen=True)
 class SimRequest:
-    """One request of the open-loop stream."""
+    """One request of the open-loop stream.  ``deadline_s`` is a relative
+    end-to-end latency budget (seconds from arrival); ``None`` means no
+    deadline (the server may still impose a default)."""
 
     rid: int
     arrival_s: float
     prompt_len: int
     decode_len: int
+    deadline_s: float | None = None
 
     def as_dict(self) -> dict:
         return dataclasses.asdict(self)

@@ -202,7 +202,8 @@ def test_single_request_latency_is_closed_form():
                                   fromlist=["SimRequest"]).SimRequest(
         rid=0, arrival_s=0.0, prompt_len=10, decode_len=5)])
     rep = simulate_serving(svc, tr, max_batch=4, max_len=128)
-    assert rep.requests == {"submitted": 1, "finished": 1, "unfinished": 0}
+    assert rep.requests == {"submitted": 1, "finished": 1,
+                            "shed": 0, "unfinished": 0}
     # first step carries the prefill, every step decodes one token
     want = 0.05 + 5 * 0.01
     assert rep.latency["max"] == pytest.approx(want)
