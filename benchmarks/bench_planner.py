@@ -25,6 +25,13 @@ Workloads:
                per-request deadline; asserts the shedder keeps the run
                finite (shed > 0, unfinished == 0) and records the shed
                fraction and survivor tail.
+  design_frontier
+               design-space exploration smoke (``repro.design``) — scores
+               the 64-point ``gap9-sweep`` generated space on the Table-2
+               grid and reduces it to the Pareto frontier twice; asserts
+               the two frontiers are byte-identical (determinism) and
+               records designs/second so frontier-scoring cost is tracked
+               per SHA.
 
 ``BENCH_planner.json`` at the repo root is an **append-only perf
 trajectory**: every run appends one record keyed by the current git SHA
@@ -253,6 +260,33 @@ def bench_sim_faults() -> dict:
     }
 
 
+def bench_design_frontier() -> dict:
+    """Design-space frontier smoke (repro.design): score the 64-point
+    gap9-sweep generated space on the Table-2 grid and take the Pareto
+    frontier.  Runs the scoring twice and asserts the frontiers are
+    identical — the determinism the subsystem promises — while the
+    trajectory records how much a 64-design sweep costs."""
+    from repro.design import get_space, pareto, score_designs
+
+    space = get_space("gap9-sweep")
+
+    def run():
+        return pareto(score_designs(space), workload="table2")
+
+    front, t = _best_of(run, reps=2)
+    again = pareto(score_designs(space), workload="table2")
+    assert front.as_dict() == again.as_dict(), "frontier must be deterministic"
+    assert front.frontier, "empty frontier on the gap9-sweep space"
+    return {
+        "designs": len(space),
+        "frontier": len(front.frontier),
+        "dominated": len(front.dominated),
+        "wall_s": t,
+        "designs_per_s": len(space) / t,
+        "top_gops": front.frontier[0].throughput,
+    }
+
+
 def main() -> None:
     table2 = bench_table2_gap8()
     allarch = bench_allarch_tpu()
@@ -260,6 +294,7 @@ def main() -> None:
     fidelity = bench_measure_fidelity()
     sim = bench_sim_latency()
     faults = bench_sim_faults()
+    frontier = bench_design_frontier()
     combined_scalar = table2["scalar_s"] + allarch["scalar_s"]
     combined_batched = table2["batched_s"] + allarch["batched_s"]
     report = {
@@ -269,6 +304,7 @@ def main() -> None:
             "cold_tune": cold,
             "sim_latency": sim,
             "sim_faults": faults,
+            "design_frontier": frontier,
         },
         "measure_fidelity": fidelity,
         "combined": {
@@ -292,7 +328,9 @@ def main() -> None:
           f"{report['combined']['speedup']:.1f}x; smoke-campaign host MAPE "
           f"{fidelity['mape_pct']:.1f}%; sim {sim['events_per_s']:,.0f} "
           f"events/s; storm overload shed {faults['shed_fraction']:.0%} "
-          f"with 0 unfinished "
+          f"with 0 unfinished; design frontier "
+          f"{frontier['designs_per_s']:.0f} designs/s "
+          f"({frontier['frontier']}/{frontier['designs']} on frontier) "
           f"(record {sha[:12]} appended to {os.path.abspath(OUT_PATH)}; "
           f"{len(trajectory['records'])} records in trajectory)")
 

@@ -1,0 +1,117 @@
+"""Design-space exploration study (see EXPERIMENTS.md).
+
+Sweeps a gap9-like accelerator family — vector lanes x L1 capacity x
+M->L1 DMA bandwidth, 64 generated designs — scores every point on the
+paper's Table-2 int8 GEMM grid *and* on qwen2-1.5b (smoke) decode
+throughput at batch 8, takes the Pareto frontier over (tokens/s, SRAM,
+area proxy), and then asks the serving simulator the deployment question
+the frontier alone cannot answer: of the efficient designs, which is the
+*cheapest* (lowest area proxy) that actually serves a fixed request
+demand under a p99 <= 0.35 s end-to-end latency SLO?
+
+The demand is fixed on purpose: the report-default traffic loads every
+design at 0.6x *its own* peak, so a faster design is also asked to serve
+more — the right question for capacity planning, the wrong one for
+picking silicon to meet a known demand.  Here every design faces the
+same Poisson stream (4 req/s, prompt 32, decode 16 — 192 tok/s of
+demand) and the SLO separates the designs that ride it from the ones
+queueing theory eats.
+
+Prints the markdown section; EXPERIMENTS.md records the committed output.
+
+  PYTHONPATH=src python experiments/design_space_study.py
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+SLO_P99_S = 0.35
+BATCH = 8
+DEMAND_RPS = 4.0
+
+
+def run() -> list[str]:
+    from repro.configs import get_config
+    from repro.design import get_space, pareto, rerank_by_slo, score_designs
+    from repro.simulate.traffic import PoissonTraffic
+
+    # the named gap9-wide space: a gap9-like base with a 64-entry vector
+    # register file (the stock 32 leaves no register-feasible micro-kernel
+    # above 16 lanes), swept over the three axes that trade area for
+    # decode latency.
+    space = get_space("gap9-wide")
+    cfg = get_config("qwen2-1.5b", smoke=True)
+    points = list(space.points())
+    scores = score_designs(points, cfg=cfg, batch=BATCH)
+    front = pareto(scores, workload=f"table2+{cfg.name} decode@b{BATCH}")
+
+    lines = [
+        f"- space: `gap9-wide` — gap9-like template (64-entry register "
+        f"file), lanes x L1 x DMA bandwidth = 4x4x4 = "
+        f"{len(space)} generated designs "
+        f"(`gen/*`), scored on the Table-2 int8 grid + `{cfg.name}` "
+        f"decode at batch {BATCH}",
+        f"- frontier over (tokens/s, SRAM bytes, area proxy): "
+        f"**{len(front.frontier)} designs**, {len(front.dominated)} "
+        f"dominated (each with a machine-readable dominance record), "
+        f"{len(front.infeasible)} memory-infeasible",
+        "",
+        "| frontier design | lanes | L1 KiB | DMA MB/s | tok/s | area |",
+        "|---|---|---|---|---|---|",
+    ]
+    for s in front.frontier[:8]:
+        p = s.params
+        lines.append(
+            f"| `{s.name}` | {p['lanes']} | {p['l1_bytes'] // 1024} "
+            f"| {p['dma_bw'] / 1e6:.1f} | {s.throughput:.1f} "
+            f"| {s.area_proxy:.0f} |")
+    if len(front.frontier) > 8:
+        lines.append(f"| … {len(front.frontier) - 8} more … | | | | | |")
+
+    traffic = PoissonTraffic(rate=DEMAND_RPS, prompt_len=32, decode_len=16)
+    ranked = rerank_by_slo(front, points, cfg,
+                           slo={"p99_latency_s": SLO_P99_S}, batch=BATCH,
+                           requests=200, traffic=traffic)
+    attaining = [r for r in ranked if r["attained"]]
+    lines += [
+        "",
+        f"- SLO re-rank at a fixed demand of {DEMAND_RPS:g} req/s "
+        f"(Poisson, prompt 32, decode 16; 200 simulated requests, "
+        f"p99 <= {SLO_P99_S:g} s): {len(attaining)}/{len(ranked)} "
+        f"frontier designs attain",
+    ]
+    if attaining:
+        cheapest = min(attaining, key=lambda r: (r["area_proxy"],
+                                                 r["design"]))
+        p = cheapest["params"]
+        lines += [
+            f"- cheapest attaining design: **`{cheapest['design']}`** "
+            f"(lanes {p['lanes']}, L1 {p['l1_bytes'] // 1024} KiB, DMA "
+            f"{p['dma_bw'] / 1e6:.1f} MB/s) — area proxy "
+            f"{cheapest['area_proxy']:.0f}, simulated goodput "
+            f"{cheapest['goodput_tps']:.1f} tok/s at p99 "
+            f"{cheapest['p99_latency_s'] * 1e3:.0f} ms",
+            f"- decode is DMA-bound in this family: above 16 lanes the "
+            f"step time barely moves with the MAC array, so the SLO is "
+            f"bought with M->L1 bandwidth, not compute — exactly the "
+            f"paper's memory-hierarchy story replayed at design time",
+        ]
+    else:
+        lines.append("- no frontier design attains (widen the space or "
+                     "relax the SLO)")
+    lines += [
+        "",
+        f"- reproduce: `PYTHONPATH=src python "
+        f"experiments/design_space_study.py`; the CLI equivalent of the "
+        f"pipeline: `python -m repro.design frontier --space gap9-wide "
+        f"--arch qwen2-1.5b --smoke --batch {BATCH} --slo-p99 "
+        f"{SLO_P99_S:g} --rps {DEMAND_RPS:g}`",
+    ]
+    return lines
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -419,3 +419,52 @@ def loop_trip_counts(
                 "ir": c(blk.m_c, mk.rows), "pr": c(blk.k_c, mk.cols)}
     return {"jc": c(n, blk.n_c), "pc": c(k, blk.k_c), "ic": c(m, blk.m_c),
             "pr": c(blk.k_c, mk.cols), "ir": c(blk.m_c, mk.rows)}
+
+
+def microkernel_invocations(
+    variant: Variant, mk: MicroKernel, blk: Blocking, prob: Problem,
+    policy: str = "analytic",
+) -> float:
+    """Number of innermost micro-kernel calls: the product of all 5 outer
+    loop trips under the given edge policy ("analytic" keeps the paper's
+    fractional accounting; "padded" matches :func:`loop_trip_counts`).
+
+    This is the coefficient of the Calibrator's opt-in per-block overhead
+    column (``overhead_per_block=True``): each micro-kernel dispatch carries
+    a constant cost (loop bookkeeping, address setup, function-call
+    overhead) that the pure rate model cannot express for small blocks.
+    """
+    m, n, k = prob.m, prob.n, prob.k
+    t = lambda x, b: _trips(x, b, policy)  # noqa: E731
+    if variant is Variant.B3A2C0:
+        return (t(n, blk.n_c) * t(k, blk.k_c) * t(m, blk.m_c)
+                * t(blk.n_c, mk.cols) * t(blk.m_c, mk.rows))
+    if variant is Variant.C3B2A0:
+        return (t(n, blk.n_c) * t(m, blk.m_c) * t(k, blk.k_c)
+                * t(blk.m_c, mk.rows) * t(blk.k_c, mk.cols))
+    if variant is Variant.B3C2A0:
+        return (t(n, blk.n_c) * t(k, blk.k_c) * t(m, blk.m_c)
+                * t(blk.k_c, mk.cols) * t(blk.m_c, mk.rows))
+    raise ValueError(variant)
+
+
+def microkernel_invocations_batch(
+    variant: Variant, rows: np.ndarray, cols: np.ndarray,
+    blocking: tuple[np.ndarray, np.ndarray, np.ndarray],
+    m: np.ndarray, n: np.ndarray, k: np.ndarray,
+    policy: str = "analytic",
+) -> np.ndarray:
+    """Vectorized :func:`microkernel_invocations` over the (P, C) lattice,
+    replaying the scalar multiplication order so totals are bit-identical."""
+    m_c, n_c, k_c = blocking
+    t = lambda x, b: _trips_batch(x, b, policy)  # noqa: E731
+    if variant is Variant.B3A2C0:
+        return (t(n, n_c) * t(k, k_c) * t(m, m_c)
+                * t(n_c, cols) * t(m_c, rows))
+    if variant is Variant.C3B2A0:
+        return (t(n, n_c) * t(m, m_c) * t(k, k_c)
+                * t(m_c, rows) * t(k_c, cols))
+    if variant is Variant.B3C2A0:
+        return (t(n, n_c) * t(k, k_c) * t(m, m_c)
+                * t(k_c, cols) * t(m_c, rows))
+    raise ValueError(variant)

@@ -38,6 +38,7 @@ from repro.machines.registry import (
     resolve,
     source_of,
     unregister,
+    unregister_prefix,
     zoo_dir,
 )
 
@@ -45,7 +46,7 @@ __all__ = [
     "CANONICAL_ROLES", "Calibrator", "FitReport", "MachineSpec",
     "SpecValidationError", "alias", "expand", "expand_many", "get",
     "list_machines", "load_zoo", "register", "resolve", "source_of",
-    "unregister", "zoo_dir",
+    "unregister", "unregister_prefix", "zoo_dir",
 ]
 
 

@@ -33,6 +33,10 @@ from repro.machines.spec import MachineSpec
 
 _RATE = "rate:"
 _ARITH = "arith:"
+#: design column of the opt-in per-block constant-overhead term
+#: (``overhead_per_block=True``): coefficient = micro-kernel invocation
+#: count, solution = seconds per innermost dispatch.
+OVERHEAD_COL = "overhead:block"
 
 #: rate assigned to design columns the fit marks as effectively free
 #: (on_nonpositive="free"): large enough that the term contributes ~nothing,
@@ -58,6 +62,15 @@ class FitReport:
     # sample indices the robust solve down-weighted below 0.5 — the rows it
     # treated as outliers; residual_rms_s excludes them when robust is set
     outliers: list[int] = dataclasses.field(default_factory=list)
+    # fitted constant cost per innermost micro-kernel dispatch
+    # (overhead_per_block=True); None when the column was not requested or
+    # was dropped.  Lives in provenance only — the spec's rate tables stay
+    # pure rates, and the simulators do not charge it.
+    overhead_per_block_s: float | None = None
+    # in-sample MAPE of the fitted design-matrix model over the samples the
+    # fit trusted (inliers under robust) — comparable across fits with and
+    # without the overhead column.
+    insample_mape_pct: float | None = None
 
     def as_provenance(self) -> dict[str, Any]:
         d = {
@@ -72,6 +85,10 @@ class FitReport:
         if self.robust:
             d["robust"] = self.robust
             d["outlier_samples"] = [int(i) for i in self.outliers]
+        if self.overhead_per_block_s is not None:
+            d["overhead_per_block_s"] = float(self.overhead_per_block_s)
+        if self.insample_mape_pct is not None:
+            d["insample_mape_pct"] = float(self.insample_mape_pct)
         return d
 
 
@@ -172,7 +189,8 @@ class Calibrator:
         return mks
 
     def design_matrix(self, problems, micro_kernels=None, *,
-                      per_mk_arith: bool = False
+                      per_mk_arith: bool = False,
+                      overhead_per_block: bool = False
                       ) -> tuple[np.ndarray, list[str]]:
         """(samples x columns) coefficients of the inverse rates, built with
         the batched engines — one vectorized evaluation for all samples.
@@ -194,20 +212,32 @@ class Calibrator:
         system — calibrate per-mk rates from ``padded``-policy samples
         (the ceil trip counts break the proportionality, mirroring a real
         edge-tiled implementation) or measure them directly like the paper.
+
+        ``overhead_per_block`` (BLIS model) appends the carried-over
+        constant-cost column :data:`OVERHEAD_COL`: its coefficient is the
+        per-sample micro-kernel invocation count, so the solved entry is
+        seconds per innermost dispatch — loop bookkeeping the pure rate
+        model attributes (wrongly) to traffic on small blocks.
         """
         probs = self._coerce_problems(problems)
         if self.model == "blis":
             return self._design_blis_batch(
-                probs, self._coerce_mks(probs, micro_kernels), per_mk_arith)
+                probs, self._coerce_mks(probs, micro_kernels), per_mk_arith,
+                overhead_per_block)
         if micro_kernels is not None:
             raise ValueError("micro_kernels only applies to the blis model")
         if per_mk_arith:
             raise ValueError("per_mk_arith only applies to the blis model")
+        if overhead_per_block:
+            raise ValueError("overhead_per_block only applies to the blis "
+                             "model")
         return self._design_pallas_batch(probs)
 
-    def _design_blis_batch(self, probs, mks, per_mk_arith: bool = False):
+    def _design_blis_batch(self, probs, mks, per_mk_arith: bool = False,
+                           overhead_per_block: bool = False):
         from repro.core.variants import (
             derive_blocking_batch,
+            microkernel_invocations_batch,
             traffic_terms_batch,
         )
 
@@ -249,6 +279,12 @@ class Calibrator:
             for dt in sorted({p.dtype for p in probs}):
                 sel = np.array([p.dtype == dt for p in probs], np.float64)
                 cols_map[f"{_ARITH}{dt}"] = sel * flops
+        if overhead_per_block:
+            cols_map[OVERHEAD_COL] = np.broadcast_to(
+                microkernel_invocations_batch(
+                    self.variant, rows, cols, blk, m, n, k,
+                    policy=self.policy),
+                (len(probs),)).astype(np.float64)
         names = list(cols_map)
         return np.stack([cols_map[c] for c in names], axis=1), names
 
@@ -297,7 +333,8 @@ class Calibrator:
 
     def design_matrix_scalar(self, problems,
                              micro_kernels=None, *,
-                             per_mk_arith: bool = False
+                             per_mk_arith: bool = False,
+                             overhead_per_block: bool = False
                              ) -> tuple[np.ndarray, list[str]]:
         """The per-sample scalar-loop design matrix, kept as the reference
         oracle the vectorized :meth:`design_matrix` must agree with
@@ -307,7 +344,11 @@ class Calibrator:
         cols_map: dict[str, list[float]] = {}
         rows_acc: list[dict[str, float]] = []
         if self.model == "blis":
-            from repro.core.variants import derive_blocking, traffic_terms
+            from repro.core.variants import (
+                derive_blocking,
+                microkernel_invocations,
+                traffic_terms,
+            )
             mks = self._coerce_mks(probs, micro_kernels)
             for p, mk in zip(probs, mks):
                 pr = p.as_problem()
@@ -324,7 +365,13 @@ class Calibrator:
                 arith_key = f"{_ARITH}{p.dtype}@{mk}" if per_mk_arith \
                     else f"{_ARITH}{p.dtype}"
                 row[arith_key] = pr.flops
+                if overhead_per_block:
+                    row[OVERHEAD_COL] = microkernel_invocations(
+                        self.variant, mk, blk, pr, policy=self.policy)
                 rows_acc.append(row)
+        elif overhead_per_block:
+            raise ValueError("overhead_per_block only applies to the blis "
+                             "model")
         else:
             from repro.core.autotune import tune_batch
             from repro.core.tpu_model import estimate
@@ -342,7 +389,10 @@ class Calibrator:
                 })
         for row in rows_acc:
             for key in row:
-                cols_map.setdefault(key, [])
+                if key != OVERHEAD_COL:     # always the last column, as in
+                    cols_map.setdefault(key, [])  # the batched builder
+        if overhead_per_block:
+            cols_map.setdefault(OVERHEAD_COL, [])
         names = list(cols_map)
         A = np.zeros((len(rows_acc), len(names)))
         for i, row in enumerate(rows_acc):
@@ -353,6 +403,8 @@ class Calibrator:
     def _template_rate(self, col: str) -> float:
         """The template's rate for one design column (what a dropped column
         keeps charging under ``on_nonpositive="drop"``)."""
+        if col == OVERHEAD_COL:
+            return FREE_RATE        # templates charge no per-block overhead
         if col.startswith(_RATE):
             o, _, d = col[len(_RATE):].partition("->")
             return self.template.transfer_rates[(o, d)]
@@ -364,7 +416,8 @@ class Calibrator:
     def fit(self, problems, seconds: Sequence[float], *, date: str | None,
             micro_kernels=None, name: str | None = None,
             register: bool = False, manifest_dir: str | None = None,
-            per_mk_arith: bool = False, on_nonpositive: str = "raise",
+            per_mk_arith: bool = False, overhead_per_block: bool = False,
+            on_nonpositive: str = "raise",
             weighting: str = "absolute",
             robust: str | None = None, trim_fraction: float = 0.1,
             extra_provenance: Mapping[str, Any] | None = None,
@@ -387,6 +440,14 @@ class Calibrator:
             manifest_dir: also persist the spec as ``<dir>/<name>.json``.
             per_mk_arith: fit the paper-§4 per-micro-kernel arithmetic
                 table instead of one rate per dtype.
+            overhead_per_block: also fit a constant cost per innermost
+                micro-kernel dispatch (the :data:`OVERHEAD_COL` design
+                column).  The solved value is recorded as
+                ``FitReport.overhead_per_block_s`` and in the spec's fit
+                provenance; the spec's rate tables are unchanged by it (the
+                simulators charge rates only), so it is an *attribution*
+                refinement: overhead seconds stop polluting the fitted
+                rates of small-block samples.
             on_nonpositive: what to do when a column solves non-positive
                 (the measurements assign that cost-model term no, or
                 negative, cost).  ``"raise"`` refuses to emit a garbage
@@ -441,7 +502,8 @@ class Calibrator:
                              f"got {trim_fraction!r}")
         t = np.asarray(list(seconds), np.float64)
         A, columns = self.design_matrix(problems, micro_kernels,
-                                        per_mk_arith=per_mk_arith)
+                                        per_mk_arith=per_mk_arith,
+                                        overhead_per_block=overhead_per_block)
         if A.shape[0] != t.shape[0]:
             raise ValueError(f"{A.shape[0]} problems vs {t.shape[0]} "
                              f"measured times")
@@ -520,6 +582,7 @@ class Calibrator:
                             for i in dropped])
             pred = pred + A[:, dropped] @ inv
         err = pred - t
+        trusted = np.ones(len(t), bool)
         outliers: list[int] = []
         if robust is not None:
             # the residual headline describes the fit actually trusted:
@@ -528,14 +591,25 @@ class Calibrator:
             inliers = rw >= 0.5
             if np.any(inliers):
                 err = err[inliers]
+                trusted = inliers
         residual = float(np.sqrt(np.mean(err ** 2)))
+        ok = trusted & (t > 0.0)
+        mape = float(100.0 * np.mean(np.abs(pred[ok] - t[ok]) / t[ok])) \
+            if np.any(ok) else None
+        overhead_s = None
+        if overhead_per_block and OVERHEAD_COL in columns:
+            j = columns.index(OVERHEAD_COL)
+            if j in keep:
+                overhead_s = float(x[keep.index(j)])
         x_full = np.full(len(columns), np.nan)
         x_full[keep] = x
         report = FitReport(columns=columns, inverse_rates=x_full,
                            residual_rms_s=residual, samples=len(t),
                            date=date,
                            dropped=[columns[i] for i in sorted(dropped)],
-                           robust=robust, outliers=outliers)
+                           robust=robust, outliers=outliers,
+                           overhead_per_block_s=overhead_s,
+                           insample_mape_pct=mape)
 
         rates = dict(self.template.transfer_rates)
         arith = dict(self.template.arith_rate)
@@ -543,6 +617,10 @@ class Calibrator:
                     for dt, tab in self.template.arith_per_mk.items()}
 
         def assign(col: str, rate: float) -> None:
+            if col == OVERHEAD_COL:
+                # not a spec rate: the fitted dispatch cost lives in the
+                # FitReport / provenance only (simulators charge rates).
+                return
             if col.startswith(_RATE):
                 o, _, d = col[len(_RATE):].partition("->")
                 rates[(o, d)] = rate

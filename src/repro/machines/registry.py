@@ -6,6 +6,13 @@ derived machines register at runtime (``register``), names can be aliased
 (``alias``), and consumers resolve machines by name, by spec object, or by
 glob patterns — ``"zoo/*"`` matches every manifest-backed machine,
 ``"gap*"`` fnmatch-globs all registered names.
+
+Glob expansion is deterministic: patterns always expand over the *sorted*
+registry, so repeated sweeps over the same registry contents return rows in
+the same order.  Generated machines (``repro.design``) register under a
+literal ``gen/`` name prefix — ``"gen/*"`` globs them like any other
+pattern, and ``unregister_prefix("gen/")`` bulk-drops them for test/CLI
+cleanup.
 """
 from __future__ import annotations
 
@@ -78,6 +85,24 @@ def unregister(name: str) -> None:
     for a, target in list(_ALIASES.items()):
         if a == name or target == name:
             del _ALIASES[a]
+
+
+def unregister_prefix(prefix: str) -> list[str]:
+    """Drop every registered machine whose name starts with ``prefix``
+    (and any aliases pointing at one).  Returns the dropped names, sorted.
+
+    The canonical use is ``unregister_prefix("gen/")`` after a generated
+    design-space sweep (`repro.design`), so bulk registration never leaks
+    into later sweeps or tests.
+    """
+    _ensure_zoo()
+    if not prefix:
+        raise ValueError("refusing to unregister an empty prefix (that "
+                         "would drop the whole registry)")
+    dropped = sorted(n for n in _REGISTRY if n.startswith(prefix))
+    for name in dropped:
+        unregister(name)
+    return dropped
 
 
 def get(name: str) -> MachineSpec:

@@ -219,7 +219,10 @@ class MachineSpec:
         """
         err = SpecValidationError
         if not self.name or not isinstance(self.name, str) \
-                or self.name != self.name.strip() or "/" in self.name:
+                or self.name != self.name.strip() \
+                or self.name.count("/") > 1 \
+                or any(not part or part != part.strip()
+                       for part in self.name.split("/")):
             raise err(f"bad machine name {self.name!r}")
         levels = tuple(self.levels)
         if not levels or len(set(levels)) != len(levels):

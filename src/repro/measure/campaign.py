@@ -190,6 +190,7 @@ class CalibrationDriftError(RuntimeError):
 def fit_from_store(store: SampleStore | str, template, *,
                    name: str | None = None, date: str | None = None,
                    policy: str | None = None, per_mk_arith: bool = False,
+                   overhead_per_block: bool = False,
                    register: bool = False, manifest_dir: str | None = None,
                    on_nonpositive: str = "raise",
                    weighting: str = "relative",
@@ -207,6 +208,10 @@ def fit_from_store(store: SampleStore | str, template, *,
     (``weighting="relative"``) so MAPE over a wide-dynamic-range grid is
     what gets minimised; pass ``"absolute"`` for the plain solve.
     Returns ``(spec, FitReport)``.
+
+    ``overhead_per_block=True`` additionally fits a constant cost per
+    innermost micro-kernel dispatch (recorded in fit provenance, not in the
+    rate tables) so loop overhead on small blocks stops polluting the rates.
 
     ``robust``/``trim_fraction`` pass through to
     :meth:`repro.machines.Calibrator.fit` — use ``robust="huber"`` (or
@@ -276,7 +281,8 @@ def fit_from_store(store: SampleStore | str, template, *,
     return cal.fit(
         probs, seconds, micro_kernels=mks, date=date, name=name,
         register=register, manifest_dir=manifest_dir,
-        per_mk_arith=per_mk_arith, on_nonpositive=on_nonpositive,
+        per_mk_arith=per_mk_arith, overhead_per_block=overhead_per_block,
+        on_nonpositive=on_nonpositive,
         weighting=weighting, robust=robust, trim_fraction=trim_fraction,
         extra_provenance={"measure": {
             "store": store.path, "harnesses": harnesses,

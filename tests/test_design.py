@@ -1,0 +1,411 @@
+"""repro.design: templates, spaces, frontier, grounding, gen/ namespace."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro import design, gemm, machines
+from repro.design import (
+    AcceleratorTemplate,
+    DesignPoint,
+    DesignScore,
+    DesignSpace,
+    get_space,
+    pareto,
+    score_designs,
+    template_of,
+)
+from repro.machines.spec import MachineSpec, SpecValidationError
+from repro.measure.campaign import grid_problems
+
+
+@pytest.fixture(autouse=True)
+def _clean_registry():
+    before = set(machines.list_machines())
+    yield
+    machines.unregister_prefix("gen/")
+    for name in set(machines.list_machines()) - before:
+        machines.unregister(name)
+
+
+# -- template expansion --------------------------------------------------------
+
+
+def test_expand_is_valid_and_roundtrips():
+    spec = AcceleratorTemplate().expand()
+    spec.validate()
+    back = MachineSpec.from_json(spec.to_json())
+    assert back == spec
+    assert back.fingerprint() == spec.fingerprint()
+    # provenance records the generator and the full parameter set
+    assert spec.provenance["generator"] == "repro.design/v1"
+    assert spec.provenance["template"]["lanes"] == 8
+    # and the template is recoverable from it
+    tpl = template_of(spec)
+    assert tpl.expand() == spec
+
+
+def test_expand_is_deterministic_and_content_addressed():
+    a = AcceleratorTemplate(lanes=4)
+    b = AcceleratorTemplate(lanes=4)
+    assert a.expand() == b.expand()
+    assert a.name == b.name and a.name.startswith("gen/")
+    # different parameters, different identity
+    assert a.name != AcceleratorTemplate(lanes=16).name
+
+
+def test_expand_derivation_rules():
+    tpl = AcceleratorTemplate(lanes=8, mac_units=2, frequency_hz=370e6,
+                              pack_bw=3.24e6, dma_bw=1.76e7, noc_bw=1.44e7,
+                              reg_bytes_per_cycle=0.96)
+    spec = tpl.expand()
+    assert spec.arith_rate["int8"] == pytest.approx(2 * 2 * 8 * 370e6)
+    assert spec.rate("M", "L1") == pytest.approx(1.76e7)
+    assert spec.rate("L2", "R") == pytest.approx(1.44e7)
+    assert spec.rate("L1", "R") == pytest.approx(0.96 * 370e6)
+    assert spec.rate("M", "M") == pytest.approx(3.24e6)
+    assert spec.rate("M", "L2") == pytest.approx(0.33 * 3.24e6)
+    assert spec.capacity("R") == 32 * 8  # regs x lanes x elem_bytes
+    assert spec.register_lanes == 8
+
+
+def test_template_validates_parameters():
+    with pytest.raises(ValueError):
+        AcceleratorTemplate(lanes=0)
+    with pytest.raises(ValueError):
+        AcceleratorTemplate(dma_bw=-1.0)
+
+
+def test_bandwidth_scaling_never_hurts_table2_throughput():
+    """Property: 2x every bandwidth -> total modelled Table-2 time never
+    increases (every transfer term is monotone in its rate; compute terms
+    unchanged; re-search can only improve the winner)."""
+    base = AcceleratorTemplate()
+    fast = base.scaled_bandwidth(2.0)
+    probs = grid_problems("table2", dtype="int8")
+    t_base = {r.problem: r.seconds for r in gemm.sweep(
+        probs, machines=[base.expand()],
+        backends=["analytic-gap8"]).rows}
+    t_fast = {r.problem: r.seconds for r in gemm.sweep(
+        probs, machines=[fast.expand()],
+        backends=["analytic-gap8"]).rows}
+    assert set(t_base) == set(t_fast) and t_base
+    for p, s in t_base.items():
+        assert t_fast[p] <= s + 1e-15
+
+
+# -- registry namespace --------------------------------------------------------
+
+
+def test_gen_namespace_and_bulk_unregister():
+    names = get_space("smoke").register_all()
+    assert len(names) == 8
+    assert all(n.startswith("gen/") for n in names)
+    assert machines.list_machines("gen/*") == sorted(names)
+    assert machines.source_of(names[0]) == "generated"
+    # zoo globs are unaffected by the gen/ names
+    assert not [n for n in machines.list_machines("zoo/*")
+                if n.startswith("gen/")]
+    dropped = machines.unregister_prefix("gen/")
+    assert dropped == sorted(names)
+    assert machines.list_machines("gen/*") == []
+    with pytest.raises(ValueError):
+        machines.unregister_prefix("")
+
+
+def test_spec_names_allow_one_namespace_slash():
+    spec = AcceleratorTemplate().expand()
+    spec.validate()  # gen/<id> passes
+    for bad in ("gen/", "/x", "a/b/c", "a /b"):
+        with pytest.raises(SpecValidationError):
+            dataclasses.replace(spec, name=bad).validate()
+
+
+def test_repeated_glob_sweeps_identically_ordered():
+    """Regression: glob expansion is sorted, so two identical sweeps
+    return rows in the same order."""
+    get_space("smoke").register_all(limit=4)
+    probs = grid_problems("smoke", dtype="int8")[:3]
+    r1 = gemm.sweep(probs, machines="gen/*", backends=["analytic-gap8"])
+    r2 = gemm.sweep(probs, machines="gen/*", backends=["analytic-gap8"])
+    key = lambda r: (r.machine, r.problem, r.seconds, str(r.selection))
+    assert [key(r) for r in r1.rows] == [key(r) for r in r2.rows]
+
+
+def test_glob_sweep_bit_identical_to_eager_specs():
+    """Acceptance: machines="gen/*" plans generated specs bit-identically
+    to eagerly expanded spec objects."""
+    space = get_space("smoke")
+    space.register_all(limit=4)
+    eager = [space.point(i).spec() for i in range(4)]
+    eager.sort(key=lambda s: s.name)        # glob order is sorted
+    probs = grid_problems("smoke", dtype="int8")[:3]
+    lazy_rows = gemm.sweep(probs, machines="gen/*",
+                           backends=["analytic-gap8"]).rows
+    eager_rows = gemm.sweep(probs, machines=eager, cache=False,
+                            backends=["analytic-gap8"]).rows
+    assert len(lazy_rows) == len(eager_rows) == 4 * 3
+    for a, b in zip(lazy_rows, eager_rows):
+        assert a.machine == b.machine
+        assert a.problem == b.problem
+        assert a.seconds == b.seconds       # bit-identical, not approx
+        assert str(a.selection) == str(b.selection)
+
+
+# -- design spaces -------------------------------------------------------------
+
+
+def test_space_indexing_and_lazy_iteration():
+    space = get_space("gap9-sweep")
+    assert len(space) == 64
+    pts = list(space.points())
+    assert [p.index for p in pts] == list(range(64))
+    # row-major: last axis fastest
+    assert pts[0].params["dma_bw"] != pts[1].params["dma_bw"]
+    assert pts[0].params["lanes"] == pts[1].params["lanes"]
+    # indexed access matches iteration
+    assert space.point(17).template == pts[17].template
+    with pytest.raises(IndexError):
+        space.point(64)
+
+
+def test_space_rejects_unknown_axis():
+    with pytest.raises(KeyError):
+        DesignSpace(AcceleratorTemplate(), {"warp_cores": (1, 2)})
+
+
+def test_wide_space_is_lazy():
+    space = get_space("wide")
+    assert len(space) > 10_000
+    # taking a few points must not expand the space
+    first = [space.point(i) for i in (0, len(space) // 2, len(space) - 1)]
+    assert len({p.name for p in first}) == 3
+
+
+def test_sampling_grid_and_halton_deterministic():
+    space = get_space("wide")
+    g1 = space.sample(16, method="grid")
+    g2 = space.sample(16, method="grid")
+    assert [p.index for p in g1] == [p.index for p in g2]
+    assert len(g1) == 16
+    h1 = space.sample(16, method="halton")
+    h2 = space.sample(16, method="halton")
+    assert [p.index for p in h1] == [p.index for p in h2]
+    assert len({p.index for p in h1}) == 16
+    assert [p.index for p in h1] != [p.index for p in g1]
+    with pytest.raises(ValueError):
+        space.sample(4, method="sobol")
+
+
+# -- frontier ------------------------------------------------------------------
+
+
+def _score(name, tput, sram, area, feasible=True):
+    return DesignScore(name=name, params={}, throughput=tput,
+                       throughput_unit="GOPS", sram_bytes=sram,
+                       area_proxy=area, feasible=feasible)
+
+
+def test_pareto_dominance_on_hand_built_points():
+    a = _score("gen/a", tput=10.0, sram=100, area=5.0)
+    b = _score("gen/b", tput=8.0, sram=100, area=6.0)   # dominated by a
+    c = _score("gen/c", tput=12.0, sram=200, area=7.0)  # trade-off: stays
+    f = pareto([c, a, b])
+    assert [s.name for s in f.frontier] == ["gen/c", "gen/a"]
+    assert len(f.dominated) == 1
+    rec = f.dominated[0]
+    assert rec.design == "gen/b" and rec.dominated_by == "gen/a"
+    assert rec.deltas["throughput"] == pytest.approx(2.0)
+    assert rec.deltas["area_proxy"] == pytest.approx(-1.0)
+    # order-independence: any input order, same frontier
+    g = pareto([b, c, a])
+    assert [s.name for s in g.frontier] == [s.name for s in f.frontier]
+    assert [r.as_dict() for r in g.dominated] == \
+        [r.as_dict() for r in f.dominated]
+
+
+def test_pareto_keeps_infeasible_out_but_recorded():
+    a = _score("gen/a", 10.0, 100, 5.0)
+    dead = _score("gen/dead", 0.0, 50, 1.0, feasible=False)
+    f = pareto([a, dead])
+    assert [s.name for s in f.frontier] == ["gen/a"]
+    assert [s.name for s in f.infeasible] == ["gen/dead"]
+    d = f.as_dict()
+    assert d["objectives"][0] == {"name": "throughput", "direction": "max"}
+
+
+def test_score_designs_and_frontier_deterministic():
+    space = get_space("smoke")
+    s1 = score_designs(space)
+    s2 = score_designs(space)
+    assert [s.as_dict() for s in s1] == [s.as_dict() for s in s2]
+    assert all(s.throughput > 0 and s.feasible for s in s1)
+    f = pareto(s1)
+    assert 1 <= len(f.frontier) <= len(s1)
+    assert len(f.frontier) + len(f.dominated) == len(s1)
+    # nothing leaked into the registry
+    assert machines.list_machines("gen/*") == []
+
+
+def test_score_designs_with_model_config():
+    from repro.configs import get_config
+
+    cfg = get_config("qwen2-1.5b", smoke=True)
+    pts = get_space("smoke").sample(2)
+    scores = score_designs(pts, cfg=cfg, batch=4)
+    assert all(s.throughput_unit == "tokens/s" for s in scores)
+    assert all(s.feasible and s.throughput > 0 for s in scores)
+    assert all(s.detail["arch"] == cfg.name for s in scores)
+
+
+def test_rerank_by_slo_orders_attaining_first():
+    from repro.configs import get_config
+    from repro.design import rerank_by_slo
+
+    cfg = get_config("qwen2-1.5b", smoke=True)
+    pts = list(get_space("smoke").points())
+    scores = score_designs(pts, cfg=cfg, batch=4)
+    f = pareto(scores, workload="decode")
+    ranked = rerank_by_slo(f, pts, cfg, slo={"p99_latency_s": 10.0},
+                           batch=4, requests=60)
+    assert ranked and all(r["attained"] for r in ranked)
+    goodputs = [r["goodput_tps"] for r in ranked]
+    assert goodputs == sorted(goodputs, reverse=True)
+
+
+# -- grounding -----------------------------------------------------------------
+
+
+def test_ground_end_to_end(tmp_path):
+    """Acceptance: expand -> sample -> Calibrator.fit -> validated MAPE
+    finite, with the grounded spec recovering the synthetic truth."""
+    from repro.design import ground, sample_design, synthetic_truth
+    from repro.measure import SampleStore
+
+    pt = get_space("smoke").point(3)
+    spec = pt.spec()
+    truth = synthetic_truth(spec, bw=0.7, arith=0.85)
+    store = SampleStore(str(tmp_path / "design.jsonl"))
+    camp = sample_design(pt, store, grid="smoke", truth=truth)
+    assert camp.samples
+    result = ground(pt, store, date="2026-08-08")
+    assert result.spec.provenance["grounded"] is True
+    assert result.spec.provenance["template"] == spec.provenance["template"]
+    assert np.isfinite(result.mape) and result.mape < 1.0
+    # the fit found the truth, not the template derivation
+    assert result.spec.rate("M", "L1") == \
+        pytest.approx(truth.rate("M", "L1"), rel=1e-6)
+    assert result.spec.arith_rate["int8"] == \
+        pytest.approx(truth.arith_rate["int8"], rel=1e-6)
+
+
+def test_ground_with_overhead_column(tmp_path):
+    from repro.design import ground, sample_design, synthetic_truth
+    from repro.measure import SampleStore
+
+    pt = get_space("smoke").point(0)
+    truth = synthetic_truth(pt.spec())
+    store = SampleStore(str(tmp_path / "d.jsonl"))
+    sample_design(pt, store, grid="smoke", truth=truth)
+    result = ground(pt, store, date=None, overhead_per_block=True)
+    fit_prov = result.spec.provenance["fit"]
+    assert "overhead:block" in fit_prov["columns"]
+    assert np.isfinite(result.mape)
+
+
+# -- calibrator overhead column (unit level) -----------------------------------
+
+
+def test_overhead_column_matches_scalar_oracle_and_recovers():
+    from repro.core.variants import MicroKernel
+    from repro.machines.calibrate import Calibrator, OVERHEAD_COL
+
+    gap8 = machines.get("gap8-fc")
+    cal = Calibrator(gap8, model="blis", policy="padded")
+    probs = [(256, 784, 2304), (64, 3136, 576), (128, 784, 1152),
+             (32, 12544, 27), (96, 196, 1024), (48, 3136, 64),
+             (200, 200, 200), (512, 64, 512)]
+    mks = [MicroKernel(*mk) for mk in
+           ((4, 24), (8, 12), (12, 8), (16, 4))] * 2
+    A, cols = cal.design_matrix(probs, mks, overhead_per_block=True)
+    As, cols_s = cal.design_matrix_scalar(probs, mks,
+                                          overhead_per_block=True)
+    assert cols == cols_s and cols[-1] == OVERHEAD_COL
+    assert np.array_equal(A, As)
+    # synthesize times with a known 5us/dispatch overhead: the fit
+    # recovers both the overhead and the unpolluted rates
+    x_true = np.array([1.0 / cal._template_rate(c) for c in cols[:-1]]
+                      + [5e-6])
+    t = A @ x_true
+    spec, rep = cal.fit(probs, t, micro_kernels=mks, date=None,
+                        overhead_per_block=True)
+    assert rep.overhead_per_block_s == pytest.approx(5e-6, rel=1e-6)
+    assert spec.provenance["fit"]["overhead_per_block_s"] == \
+        pytest.approx(5e-6, rel=1e-6)
+    assert spec.rate("M", "L1") == pytest.approx(gap8.rate("M", "L1"),
+                                                 rel=1e-6)
+    # without the column, the same data fits measurably worse
+    _, rep0 = cal.fit(probs, t, micro_kernels=mks, date=None,
+                      on_nonpositive="free")
+    assert rep0.insample_mape_pct > rep.insample_mape_pct
+
+
+def test_overhead_column_rejected_off_blis():
+    from repro.machines.calibrate import Calibrator
+
+    cal = Calibrator(machines.get("tpu-v5e"), model="pallas")
+    with pytest.raises(ValueError, match="overhead_per_block"):
+        cal.design_matrix([(128, 128, 128)], overhead_per_block=True)
+
+
+def test_microkernel_invocations_batch_matches_scalar():
+    from repro.core.variants import (
+        Blocking,
+        MicroKernel,
+        Problem,
+        Variant,
+        derive_blocking,
+        microkernel_invocations,
+        microkernel_invocations_batch,
+    )
+
+    gap8 = machines.get("gap8-fc")
+    probs = [Problem(96, 196, 1024), Problem(32, 12544, 27),
+             Problem(200, 200, 200)]
+    mk = MicroKernel(8, 12)
+    for variant in Variant:
+        for policy in ("analytic", "padded"):
+            blks = [derive_blocking(variant, mk, gap8, p) for p in probs]
+            scalar = [microkernel_invocations(variant, mk, b, p, policy)
+                      for p, b in zip(probs, blks)]
+            rows = np.full(len(probs), mk.rows)
+            cols = np.full(len(probs), mk.cols)
+            m = np.array([p.m for p in probs])
+            n = np.array([p.n for p in probs])
+            k = np.array([p.k for p in probs])
+            blk = (np.array([b.m_c for b in blks]),
+                   np.array([b.n_c for b in blks]),
+                   np.array([b.k_c for b in blks]))
+            batch = microkernel_invocations_batch(
+                variant, rows, cols, blk, m, n, k, policy)
+            assert np.array_equal(np.asarray(scalar, np.float64), batch)
+
+
+# -- CLI -----------------------------------------------------------------------
+
+
+def test_cli_frontier_smoke(capsys):
+    from repro.design.__main__ import main
+
+    assert main(["frontier", "--space", "smoke"]) == 0
+    out = capsys.readouterr().out
+    assert "on frontier" in out
+    assert machines.list_machines("gen/*") == []
+
+
+def test_cli_sweep_cleans_namespace(capsys):
+    from repro.design.__main__ import main
+
+    assert main(["sweep", "--space", "smoke", "--limit", "2",
+                 "--grid", "smoke", "--dtype", "int8"]) == 0
+    assert machines.list_machines("gen/*") == []
