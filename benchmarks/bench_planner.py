@@ -32,6 +32,10 @@ Workloads:
                the two frontiers are byte-identical (determinism) and
                records designs/second so frontier-scoring cost is tracked
                per SHA.
+  obs_overhead observability tax (``repro.obs``) — the Table-2 sweep with
+               span tracing disabled vs the span entry point stubbed out;
+               asserts the disabled instrumentation costs < 2% and records
+               the enabled-mode cost alongside.
 
 ``BENCH_planner.json`` at the repo root is an **append-only perf
 trajectory**: every run appends one record keyed by the current git SHA
@@ -287,6 +291,55 @@ def bench_design_frontier() -> dict:
     }
 
 
+def bench_obs_overhead() -> dict:
+    """Observability tax (repro.obs): the Table-2 GEMM sweep timed with
+    span tracing disabled (the shipping default) against the same sweep
+    with the span entry point stubbed out entirely — the closest reachable
+    approximation of un-instrumented code.  Disabled tracing must cost
+    under 2% on the planner's hottest loop; the enabled-mode cost rides
+    along in the trajectory (recorded, not asserted) so trace-buffer
+    regressions show up per SHA too."""
+    from repro import obs
+    from repro.gemm import sweep
+    from repro.obs.trace import _NULL
+
+    probs = [row.problem for row in TABLE2]
+    reps_inner = 25  # one sweep is ~4ms; batch them so 2% is above noise
+
+    def run_sweeps():
+        for _ in range(reps_inner):
+            sweep(probs, backends=("analytic-gap8",), machines="gap8-fc",
+                  cache=False)
+
+    obs.disable()
+    _, disabled_t = _best_of(run_sweeps, reps=5)
+    stub, orig = (lambda *a, **k: _NULL), obs.span
+    try:
+        obs.span = stub
+        _, stub_t = _best_of(run_sweeps, reps=5)
+    finally:
+        obs.span = orig
+    obs.enable()
+    try:
+        _, enabled_t = _best_of(run_sweeps, reps=5)
+    finally:
+        obs.disable()
+        obs.clear()
+    overhead_pct = 100.0 * (disabled_t - stub_t) / stub_t
+    assert overhead_pct < 2.0, (
+        f"disabled-tracing overhead {overhead_pct:.2f}% >= 2% budget "
+        f"(disabled {disabled_t:.4f}s vs stubbed {stub_t:.4f}s)")
+    return {
+        "sweeps": reps_inner,
+        "stubbed_s": stub_t,
+        "disabled_s": disabled_t,
+        "enabled_s": enabled_t,
+        "disabled_overhead_pct": overhead_pct,
+        "enabled_overhead_pct": 100.0 * (enabled_t - stub_t) / stub_t,
+        "budget_pct": 2.0,
+    }
+
+
 def main() -> None:
     table2 = bench_table2_gap8()
     allarch = bench_allarch_tpu()
@@ -295,6 +348,7 @@ def main() -> None:
     sim = bench_sim_latency()
     faults = bench_sim_faults()
     frontier = bench_design_frontier()
+    obs_tax = bench_obs_overhead()
     combined_scalar = table2["scalar_s"] + allarch["scalar_s"]
     combined_batched = table2["batched_s"] + allarch["batched_s"]
     report = {
@@ -305,6 +359,7 @@ def main() -> None:
             "sim_latency": sim,
             "sim_faults": faults,
             "design_frontier": frontier,
+            "obs_overhead": obs_tax,
         },
         "measure_fidelity": fidelity,
         "combined": {
@@ -330,7 +385,9 @@ def main() -> None:
           f"events/s; storm overload shed {faults['shed_fraction']:.0%} "
           f"with 0 unfinished; design frontier "
           f"{frontier['designs_per_s']:.0f} designs/s "
-          f"({frontier['frontier']}/{frontier['designs']} on frontier) "
+          f"({frontier['frontier']}/{frontier['designs']} on frontier); "
+          f"obs tax {obs_tax['disabled_overhead_pct']:.2f}% disabled / "
+          f"{obs_tax['enabled_overhead_pct']:.1f}% enabled "
           f"(record {sha[:12]} appended to {os.path.abspath(OUT_PATH)}; "
           f"{len(trajectory['records'])} records in trajectory)")
 

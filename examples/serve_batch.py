@@ -23,7 +23,9 @@ expired or unmeetable requests are shed at admission, a full queue
 pushes back on the submitter, and the shed/expired/degraded counters
 land in ``perf_report()`` (see docs/RESILIENCE.md).  ``--trace`` writes
 the engine's event trace for ``python -m repro.simulate replay``
-sim-vs-real validation.
+sim-vs-real validation; ``--trace-out`` writes a Chrome-trace/Perfetto
+JSON of the run's spans + events (``repro.obs``, see
+docs/OBSERVABILITY.md).
 """
 import argparse
 import os
@@ -51,6 +53,7 @@ def main() -> None:
     ap.add_argument("--on-truncate", choices=["raise", "report"],
                     default="raise")
     ap.add_argument("--trace", default=None)
+    ap.add_argument("--trace-out", default=None)
     a = ap.parse_args()
     slo = traffic = None
     if a.slo_p99 is not None:
@@ -64,7 +67,8 @@ def main() -> None:
                machine=a.machine, memory=not a.no_memory, slo=slo,
                traffic=traffic, deadline_s=a.deadline,
                queue_limit=a.queue_limit, faults=a.faults,
-               on_truncate=a.on_truncate, trace_path=a.trace)
+               on_truncate=a.on_truncate, trace_path=a.trace,
+               trace_out=a.trace_out)
 
 
 if __name__ == "__main__":

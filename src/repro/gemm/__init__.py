@@ -44,6 +44,7 @@ from repro.gemm.planner import (
     plan_cache_stats,
     plan_many,
     plan_model_gemms,
+    reset_plan_cache_stats,
     save_cache,
     warm_cache,
 )
@@ -55,6 +56,6 @@ __all__ = [
     "SweepResult", "SweepRow", "UnknownBackendError", "VariantChoice",
     "backends", "clear_plan_cache", "default_execute_backend", "dtype_tag",
     "get_backend", "grouped_matmul", "matmul", "plan", "plan_cache_stats",
-    "plan_many", "plan_model_gemms", "register_backend", "save_cache",
-    "sweep", "warm_cache",
+    "plan_many", "plan_model_gemms", "register_backend",
+    "reset_plan_cache_stats", "save_cache", "sweep", "warm_cache",
 ]

@@ -191,6 +191,77 @@ class GemmPlan:
                 f"{sel if sel is not None else 'as-is'} ({cost}, "
                 f"{self.provenance.get('source', 'search')})")
 
+    def explain(self) -> dict:
+        """Cost attribution: where does this plan's predicted time go?
+
+        Returns a ``repro.obs/explain-v1`` dict whose ``terms`` decompose
+        the estimate per traffic/arithmetic component — which memory
+        level, how many bytes, at what effective rate, and what fraction
+        of the total — so "why is this cell slow" is answerable from the
+        façade without touching the cost-model internals.
+
+        Composition semantics mirror :attr:`predicted_seconds`:
+
+        * GAP8-simulator plans (:class:`CostBreakdown`) and no-overlap
+          TPU plans compose by plain sum (paper §3.1), so the term
+          ``fraction`` values sum to 1 and ``seconds`` sum to
+          ``estimate().total`` exactly (``composition: "sum"``).
+        * Overlapped TPU plans are bound by the slowest resource plus
+          pipeline fill (``composition: "overlapped"``); fractions are
+          still reported against the no-overlap sum (``sum_s``) so they
+          remain a partition, with the headline ``total_s`` carrying the
+          overlapped time.
+        """
+        c = self.estimate()
+        terms: list[dict] = []
+        if isinstance(c, TpuCost):
+            overlap = bool(self.provenance.get("overlap", True))
+            flops = self.problem.flops
+            terms = [
+                {"name": "compute", "kind": "compute", "level": "MXU",
+                 "seconds": c.t_compute, "bytes": None,
+                 "rate": flops / c.t_compute if c.t_compute else None},
+                {"name": "stream_hbm", "kind": "traffic", "level": "HBM",
+                 "seconds": c.t_hbm, "bytes": c.hbm_bytes,
+                 "rate": c.hbm_bytes / c.t_hbm if c.t_hbm else None},
+                {"name": "stream_vmem", "kind": "traffic", "level": "VMEM",
+                 "seconds": c.t_vmem, "bytes": c.vmem_bytes,
+                 "rate": c.vmem_bytes / c.t_vmem if c.t_vmem else None},
+            ]
+            composition = "overlapped" if overlap else "sum"
+        else:
+            flops = self.problem.flops
+            for name, secs in c.components.items():
+                if name == "arith":
+                    terms.append(
+                        {"name": name, "kind": "compute", "level": "R",
+                         "seconds": secs, "bytes": None,
+                         "rate": flops / secs if secs else None})
+                else:
+                    nbytes = c.traffic_bytes.get(name)
+                    terms.append(
+                        {"name": name, "kind": "traffic",
+                         "level": c.origins.get(name),
+                         "seconds": secs, "bytes": nbytes,
+                         "rate": (nbytes / secs)
+                                 if (secs and nbytes is not None) else None})
+            composition = "sum"
+        sum_s = float(sum(t["seconds"] for t in terms))
+        for t in terms:
+            t["fraction"] = (t["seconds"] / sum_s) if sum_s else 0.0
+        terms.sort(key=lambda t: -t["seconds"])
+        return {
+            "schema": "repro.obs/explain-v1",
+            "backend": self.backend,
+            "machine": self.machine,
+            "problem": f"{self.problem.m}x{self.problem.n}x{self.problem.k}"
+                       f":{self.problem.dtype}",
+            "composition": composition,
+            "total_s": self.predicted_seconds,
+            "sum_s": sum_s,
+            "terms": terms,
+        }
+
 
 def _backend_of(name: str):
     from repro.gemm.registry import get_backend

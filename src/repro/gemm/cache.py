@@ -13,6 +13,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Any, Mapping
 
+from repro import obs
 from repro.core.autotune import Manifest, TileDecision
 from repro.core.tpu_model import TileConfig, TpuCost
 from repro.gemm.api import GemmPlan, GemmProblem
@@ -58,12 +59,29 @@ class PlanCache:
         plan = self._plans.get(key)
         if plan is None:
             self.stats.misses += 1
+            obs.metrics.counter("plan_cache.misses")
         else:
             self.stats.hits += 1
+            obs.metrics.counter("plan_cache.hits")
         return plan
 
     def put(self, key: tuple, plan: GemmPlan) -> None:
         self._plans[key] = plan
+
+    def note_deduped(self, n: int) -> None:
+        """Account problems dropped by bulk-planning dedupe (kept next to
+        the other counters so the obs mirror stays in lock-step)."""
+        if n:
+            self.stats.deduped += n
+            obs.metrics.counter("plan_cache.deduped", n)
+
+    def reset_stats(self) -> CacheStats:
+        """Zero the counters without touching the cached plans — the
+        back-to-back-sweeps fix: each experiment snapshots deltas against
+        a fresh zero instead of a process-cumulative total."""
+        old = self.stats
+        self.stats = CacheStats()
+        return old
 
     def clear(self) -> None:
         self._plans.clear()
@@ -85,6 +103,7 @@ class PlanCache:
         tile = self._manifest.lookup(problem.as_shape())
         if tile is not None:
             self.stats.manifest_hits += 1
+            obs.metrics.counter("plan_cache.manifest_hits")
         return tile
 
     def save(self, path: str) -> int:

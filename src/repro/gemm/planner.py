@@ -3,6 +3,7 @@ from __future__ import annotations
 
 import jax
 
+from repro import obs
 from repro.gemm.api import GemmPlan, GemmProblem, resolve_machine
 from repro.gemm.backends import dtype_tag, register_builtin_backends
 from repro.gemm.cache import PlanCache
@@ -77,48 +78,57 @@ def plan_many(problems, *, backend: str = "analytic-tpu", machine=None,
     """
     b = get_backend(backend)
     mspec = resolve_machine(machine, b.default_machine)
-    probs = [b.coerce_problem(p, dtype) for p in problems]
-    unique: dict[GemmProblem, None] = {}
-    for p in probs:
-        unique.setdefault(p)
-    _CACHE.stats.deduped += len(probs) - len(unique)
-    if not cache:
-        built = dict(zip(unique, b.make_plans(list(unique), mspec, policy,
-                                              options)))
-        return [built[p] for p in probs]
-    resolved: dict[GemmProblem, GemmPlan] = {}
-    missing: list[GemmProblem] = []
-    for p in unique:
-        # cache_token = name@content-fingerprint: same-named machines with
-        # different rate tables (derived specs, re-registered calibrations)
-        # must not share plans.
-        key = _CACHE.key(p, b.name, mspec.cache_token, policy, options)
-        hit = _CACHE.get(key)
-        if hit is not None:
-            resolved[p] = hit
-            continue
-        # The manifest persists only the default search (tile selected under
-        # overlap=True, no pinned options); requests with explicit options
-        # must re-search rather than inherit a tile chosen under different
-        # rules.
-        built = None
-        if not options:
-            tile = _CACHE.manifest_tile(p)
-            if tile is not None:
-                built = b.plan_from_tile(p, mspec, policy, tile)
-        if built is not None:
-            _CACHE.put(key, built)
-            resolved[p] = built
-        else:
-            missing.append(p)
-    if missing:
-        for p, made in zip(missing, b.make_plans(missing, mspec, policy,
-                                                 options)):
-            _CACHE.put(_CACHE.key(p, b.name, mspec.cache_token, policy,
-                                  options),
-                       made)
-            resolved[p] = made
-    return [resolved[p] for p in probs]
+    with obs.span("gemm.plan_many", backend=b.name, machine=mspec.name,
+                  problems=len(problems)) as sp:
+        probs = [b.coerce_problem(p, dtype) for p in problems]
+        with obs.span("gemm.plan_many.dedupe"):
+            unique: dict[GemmProblem, None] = {}
+            for p in probs:
+                unique.setdefault(p)
+            _CACHE.note_deduped(len(probs) - len(unique))
+        sp.set(unique=len(unique))
+        if not cache:
+            with obs.span("gemm.plan_many.batch_score",
+                          missing=len(unique)):
+                built = dict(zip(unique, b.make_plans(list(unique), mspec,
+                                                      policy, options)))
+            return [built[p] for p in probs]
+        resolved: dict[GemmProblem, GemmPlan] = {}
+        missing: list[GemmProblem] = []
+        for p in unique:
+            # cache_token = name@content-fingerprint: same-named machines
+            # with different rate tables (derived specs, re-registered
+            # calibrations) must not share plans.
+            key = _CACHE.key(p, b.name, mspec.cache_token, policy, options)
+            hit = _CACHE.get(key)
+            if hit is not None:
+                resolved[p] = hit
+                continue
+            # The manifest persists only the default search (tile selected
+            # under overlap=True, no pinned options); requests with explicit
+            # options must re-search rather than inherit a tile chosen under
+            # different rules.
+            built = None
+            if not options:
+                tile = _CACHE.manifest_tile(p)
+                if tile is not None:
+                    built = b.plan_from_tile(p, mspec, policy, tile)
+            if built is not None:
+                _CACHE.put(key, built)
+                resolved[p] = built
+            else:
+                missing.append(p)
+        sp.set(missing=len(missing))
+        if missing:
+            with obs.span("gemm.plan_many.batch_score",
+                          missing=len(missing)):
+                for p, made in zip(missing, b.make_plans(missing, mspec,
+                                                         policy, options)):
+                    _CACHE.put(_CACHE.key(p, b.name, mspec.cache_token,
+                                          policy, options),
+                               made)
+                    resolved[p] = made
+        return [resolved[p] for p in probs]
 
 
 def backends() -> list[str]:
@@ -130,10 +140,25 @@ def clear_plan_cache() -> None:
     _CACHE.clear()
 
 
-def plan_cache_stats() -> dict:
+def plan_cache_stats(reset: bool = False) -> dict:
+    """Counter snapshot of the process plan cache.
+
+    The counters are process-cumulative; ``reset=True`` returns the
+    snapshot and then zeros them (cached plans stay), so back-to-back
+    experiments in one process each start from zero instead of reporting
+    everything since import.  ``sweep()`` additionally reports per-call
+    deltas in ``SweepResult.stats`` regardless of resets.
+    """
     d = _CACHE.stats.as_dict()
     d["size"] = len(_CACHE)
+    if reset:
+        _CACHE.reset_stats()
     return d
+
+
+def reset_plan_cache_stats() -> None:
+    """Zero the plan-cache counters without dropping cached plans."""
+    _CACHE.reset_stats()
 
 
 def warm_cache(manifest_path: str) -> int:

@@ -23,6 +23,7 @@ import dataclasses
 import itertools
 from typing import Any, Iterable, Sequence
 
+from repro import obs
 from repro.core.simulator import CostBreakdown
 from repro.core.tpu_model import TpuCost
 from repro.gemm.api import GemmPlan, GemmProblem
@@ -253,7 +254,10 @@ def sweep(problems: Iterable, *,
             return True
         key = (id(ma) if isinstance(ma, MachineSpec) else ma, dt)
         if key not in verdicts:
-            verdict = feasible(ma, dt)
+            with obs.span("gemm.sweep.prune", dtype=dt,
+                          machine=(ma.name if isinstance(ma, MachineSpec)
+                                   else ma)):
+                verdict = feasible(ma, dt)
             ok, reason = verdict if isinstance(verdict, tuple) \
                 else (verdict, None)
             verdicts[key] = (bool(ok), reason)
@@ -264,46 +268,59 @@ def sweep(problems: Iterable, *,
                            "reason": reason or "infeasible"})
         return ok
 
-    for sc in grid["scenarios"]:
-        sc_tag = None if sc is None else str(getattr(sc, "name", sc))
-        sc_problems = problems
-        transform = getattr(sc, "problems", None)
-        if callable(transform):
-            sc_problems = list(transform(problems))
-        for be in grid["backends"]:
-            axes = get_backend(be).sweep_axes
-            vas = grid["variants"] if "variant" in axes else [None]
-            mks = grid["micro_kernels"] if "micro_kernel" in axes else [None]
-            for ma, dt in itertools.product(grid["machines"], grid["dtypes"]):
-                if not admissible(be, ma, dt):
-                    continue
-                for po, va, mk in itertools.product(grid["policies"],
-                                                    vas, mks):
-                    opts = dict(options)
-                    if va is not None:
-                        opts["variant"] = va
-                    if mk is not None:
-                        opts["micro_kernel"] = mk
-                    plans = plan_many(sc_problems, backend=be, machine=ma,
-                                      dtype=dt, policy=po, cache=cache,
-                                      **opts)
-                    va_tag = None if va is None \
-                        else str(getattr(va, "value", va))
-                    mk_tag = None if mk is None else \
-                        (str(mk) if not isinstance(mk, (tuple, list))
-                         else f"{mk[0]}x{mk[1]}")
-                    rows.extend(SweepRow(
-                        problem=p.problem, backend=be, machine=p.machine,
-                        policy=po, variant=va_tag, micro_kernel=mk_tag,
-                        plan=p, scenario=sc_tag,
-                    ) for p in plans)
-    after = plan_cache_stats()
-    stats = {
-        "problems": len(problems),
-        "grid_points": len(rows),
-        "pruned": len(pruned),
-        "deduped": after["deduped"] - before["deduped"],
-        "cache_hits": after["hits"] - before["hits"],
-        "cache_misses": after["misses"] - before["misses"],
-    }
+    with obs.span("gemm.sweep", problems=len(problems),
+                  backends=len(grid["backends"]),
+                  machines=len(grid["machines"])) as sweep_span:
+        for sc in grid["scenarios"]:
+            sc_tag = None if sc is None else str(getattr(sc, "name", sc))
+            sc_problems = problems
+            transform = getattr(sc, "problems", None)
+            if callable(transform):
+                sc_problems = list(transform(problems))
+            for be in grid["backends"]:
+                axes = get_backend(be).sweep_axes
+                vas = grid["variants"] if "variant" in axes else [None]
+                mks = grid["micro_kernels"] if "micro_kernel" in axes \
+                    else [None]
+                for ma, dt in itertools.product(grid["machines"],
+                                                grid["dtypes"]):
+                    if not admissible(be, ma, dt):
+                        continue
+                    for po, va, mk in itertools.product(grid["policies"],
+                                                        vas, mks):
+                        opts = dict(options)
+                        if va is not None:
+                            opts["variant"] = va
+                        if mk is not None:
+                            opts["micro_kernel"] = mk
+                        plans = plan_many(sc_problems, backend=be,
+                                          machine=ma, dtype=dt, policy=po,
+                                          cache=cache, **opts)
+                        va_tag = None if va is None \
+                            else str(getattr(va, "value", va))
+                        mk_tag = None if mk is None else \
+                            (str(mk) if not isinstance(mk, (tuple, list))
+                             else f"{mk[0]}x{mk[1]}")
+                        rows.extend(SweepRow(
+                            problem=p.problem, backend=be, machine=p.machine,
+                            policy=po, variant=va_tag, micro_kernel=mk_tag,
+                            plan=p, scenario=sc_tag,
+                        ) for p in plans)
+        after = plan_cache_stats()
+        # every counter the cache exposes is reported as a per-call delta
+        # (manifest_hits included — it used to be missing, so back-to-back
+        # sweeps leaked cumulative numbers into SweepResult.stats).
+        stats = {
+            "problems": len(problems),
+            "grid_points": len(rows),
+            "pruned": len(pruned),
+            "deduped": after["deduped"] - before["deduped"],
+            "cache_hits": after["hits"] - before["hits"],
+            "cache_misses": after["misses"] - before["misses"],
+            "manifest_hits": after["manifest_hits"]
+                             - before["manifest_hits"],
+        }
+        sweep_span.set(grid_points=len(rows), pruned=len(pruned))
+    obs.metrics.counter("sweep.cells_scored", len(rows))
+    obs.metrics.counter("sweep.cells_pruned", len(pruned))
     return SweepResult(rows=rows, grid=grid, stats=stats, pruned=pruned)

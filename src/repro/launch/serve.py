@@ -16,6 +16,7 @@ import time
 import jax
 import numpy as np
 
+from repro import obs
 from repro.configs import ARCH_IDS, get_config
 from repro.checkpoint.manager import CheckpointManager
 from repro.models.common import HOST_MESH, split_params
@@ -31,7 +32,12 @@ def serve_demo(arch: str, *, smoke: bool = True, n_requests: int = 8,
                memory: bool = True, slo=None, traffic=None,
                deadline_s: float | None = None, queue_limit: int | None = None,
                faults=None, on_truncate: str = "raise",
-               trace_path: str | None = None) -> dict:
+               trace_path: str | None = None,
+               trace_out: str | None = None) -> dict:
+    if trace_out:
+        # span tracing costs nothing until enabled; a Chrome-trace export
+        # without spans would be instants-only, so asking for one opts in
+        obs.enable()
     cfg = get_config(arch, smoke=smoke)
     lm = LM(cfg, HOST_MESH)
     values, _ = split_params(lm.init(jax.random.key(seed)))
@@ -127,6 +133,15 @@ def serve_demo(arch: str, *, smoke: bool = True, n_requests: int = 8,
         print(f"wrote event trace to {trace_path} "
               f"(replay: python -m repro.simulate replay --trace "
               f"{trace_path})")
+    print(f"  drift: {perf['drift_status']} "
+          f"(predicted step {perf['predicted_gemm_seconds_per_step']:.3g}s "
+          f"vs measured — see perf_report()['drift'])")
+    if trace_out:
+        doc = obs.save_chrome_trace(trace_out)
+        print(f"wrote Chrome trace to {trace_out} "
+              f"({doc['metadata']['spans']} spans, "
+              f"{doc['metadata']['events']} events; open in "
+              f"chrome://tracing or ui.perfetto.dev)")
     return {"requests": len(done), "tokens": toks, "seconds": dt}
 
 
@@ -172,6 +187,9 @@ def main() -> None:
     ap.add_argument("--trace", default=None,
                     help="write the engine's event trace JSON here "
                          "(consumed by python -m repro.simulate replay)")
+    ap.add_argument("--trace-out", default=None,
+                    help="write a Chrome-trace/Perfetto JSON of the run "
+                         "(spans + events; enables span tracing)")
     a = ap.parse_args()
     slo = traffic = None
     if a.slo_p99 is not None:
@@ -189,7 +207,7 @@ def main() -> None:
                memory=not a.no_memory, slo=slo, traffic=traffic,
                deadline_s=a.deadline, queue_limit=a.queue_limit,
                faults=a.faults, on_truncate=a.on_truncate,
-               trace_path=a.trace)
+               trace_path=a.trace, trace_out=a.trace_out)
 
 
 if __name__ == "__main__":

@@ -23,13 +23,31 @@ closes the loop so a calibrated spec feeds the planner instead of vanishing:
 from __future__ import annotations
 
 import dataclasses
+import functools
 import os
 from typing import Any, Mapping, Sequence
 
 import numpy as np
 
+from repro import obs
 from repro.machines import registry as _registry
 from repro.machines.spec import MachineSpec
+
+
+def _traced_fit(fn):
+    """Wrap :meth:`Calibrator.fit` in an ``obs`` span carrying the fit's
+    headline numbers — a refit shows up on the same timeline as the
+    sweeps and serving steps it recalibrates."""
+    @functools.wraps(fn)
+    def wrapped(self, *args, **kwargs):
+        with obs.span("calibrate.fit", template=self.template.name,
+                      model=self.model) as sp:
+            spec, report = fn(self, *args, **kwargs)
+            sp.set(samples=report.samples, columns=len(report.columns),
+                   residual_rms_s=report.residual_rms_s)
+            obs.metrics.counter("calibrate.fits")
+            return spec, report
+    return wrapped
 
 _RATE = "rate:"
 _ARITH = "arith:"
@@ -413,6 +431,7 @@ class Calibrator:
 
     # -- the fit --------------------------------------------------------------
 
+    @_traced_fit
     def fit(self, problems, seconds: Sequence[float], *, date: str | None,
             micro_kernels=None, name: str | None = None,
             register: bool = False, manifest_dir: str | None = None,

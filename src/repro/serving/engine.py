@@ -22,9 +22,11 @@ import jax
 import jax.numpy as jnp
 
 from repro import gemm as gemm_api
+from repro import obs
 from repro.configs.base import ModelConfig
 from repro.models.common import split_params
 from repro.models.model import LM
+from repro.obs import DriftMonitor
 from repro.serving.buckets import bucket_len as _bucket
 from repro.serving.resilience import (SHED_DEADLINE_EXPIRED,
                                       SHED_DEADLINE_UNMEETABLE,
@@ -201,8 +203,24 @@ class ServingEngine:
         # event trace (repro.serving/trace-v1): submits, admissions, steps
         # with wall durations, first tokens, finishes — what
         # repro.simulate.replay re-enacts.  Cheap (a dict append per
-        # event), so always on.
-        self.trace_events: list[dict] = []
+        # event), so always on.  The events live in the process
+        # ``repro.obs`` recorder tagged with this engine's identity;
+        # ``trace_events`` / ``trace_json()`` are views over it.
+        self._obs_tag = f"serving-engine-{id(self):x}"
+        # online prediction drift: measured step wall time vs the frozen
+        # plans' decode-step estimate, keyed by the deployment machine's
+        # geometry fingerprint (see docs/OBSERVABILITY.md).
+        self.drift = DriftMonitor()
+        self._drift_key: str | None = None
+
+    def _trace(self, payload: dict) -> None:
+        obs.recorder.add_event(payload, track="wall", tag=self._obs_tag)
+
+    @property
+    def trace_events(self) -> list[dict]:
+        """This engine's trace-v1 event payloads, in emission order — a
+        view over the process ``repro.obs`` recorder."""
+        return obs.recorder.events_for(tag=self._obs_tag)
 
     @property
     def gemm_plans(self) -> list:
@@ -404,6 +422,15 @@ class ServingEngine:
             report["resilience"] = resilience
         if self.autoconfig is not None:
             report["autoconfig"] = self.autoconfig
+        # online prediction-drift verdict (repro.obs): every step feeds
+        # measured wall time vs the frozen-plan estimate; ok/warn/stale
+        # uses the offline CalibrationDriftError threshold.  On a host
+        # running the smoke model against an analytic TPU spec, "stale"
+        # is the *honest* verdict — the calibration really does not
+        # describe this machine.
+        drift = self.drift.report()
+        report["drift"] = drift
+        report["drift_status"] = drift["status"]
         return report
 
     def _resilience_report(self) -> dict | None:
@@ -489,12 +516,14 @@ class ServingEngine:
         if self.queue_limit is not None \
                 and len(self.queue) >= self.queue_limit:
             self.rejected_submits += 1
-            self.trace_events.append({
+            obs.metrics.counter("serving.rejected_submits")
+            self._trace({
                 "type": "reject", "rid": req.rid, "t": req.t_submit,
                 "queue_depth": len(self.queue), "limit": self.queue_limit})
             raise QueueFullError(limit=self.queue_limit,
                                  depth=len(self.queue))
         self.queue.append(req)
+        obs.metrics.counter("serving.submitted")
         event = {
             "type": "submit", "rid": req.rid, "t": req.t_submit,
             "prompt_len": len(req.prompt),
@@ -502,7 +531,7 @@ class ServingEngine:
         dl = self._deadline_for(req)
         if dl is not None:
             event["deadline_s"] = dl
-        self.trace_events.append(event)
+        self._trace(event)
 
     def _free_slots(self) -> list[int]:
         return [i for i, r in enumerate(self.slot_req) if r is None]
@@ -559,7 +588,9 @@ class ServingEngine:
         req.t_shed = now
         req.shed_cause = cause
         self.shed_requests.append(req)
-        self.trace_events.append({
+        obs.metrics.counter("serving.shed")
+        obs.metrics.counter(f"serving.shed.{cause}")
+        self._trace({
             "type": "shed", "rid": req.rid, "t": now, "cause": cause,
             "waited_s": now - req.t_submit})
 
@@ -590,19 +621,21 @@ class ServingEngine:
                 and self._rung < len(self.ladder) - 1:
             self._rung += 1
             self._overload_streak = 0
+            obs.metrics.counter("serving.degraded")
             event = {"type": "degrade", "t": time.perf_counter(),
                      "rung": self.rung.name,
                      "decode_slots": self.rung.decode_slots,
                      "kv_dtype": self.rung.kv_dtype}
-            self.trace_events.append(event)
+            self._trace(event)
             self.degradations.append(dict(event))
         elif self._calm_streak >= self.overload_patience and self._rung >= 0:
             self._rung -= 1
             self._calm_streak = 0
+            obs.metrics.counter("serving.restored")
             name = self.rung.name if self.rung else "nominal"
             event = {"type": "restore", "t": time.perf_counter(),
                      "rung": name, "decode_slots": self.slot_cap}
-            self.trace_events.append(event)
+            self._trace(event)
             self.degradations.append(dict(event))
 
     def _admit(self) -> list[Request]:
@@ -625,15 +658,18 @@ class ServingEngine:
                                 for k in self.lm.cfg.block_pattern)
                 bucket = (len(prefix) if recurrent
                           else min(_bucket(len(prefix)), self.max_len))
-                toks = jnp.zeros((1, bucket), jnp.int32)
-                toks = toks.at[0, :len(prefix)].set(
-                    jnp.array(prefix, jnp.int32))
-                pref = self._prefill_fn(bucket)(self.params, toks)
-                self.caches = self._insert(self.caches, pref, slot)
+                with obs.span("serve.prefill", rid=req.rid, bucket=bucket,
+                              slot=slot):
+                    toks = jnp.zeros((1, bucket), jnp.int32)
+                    toks = toks.at[0, :len(prefix)].set(
+                        jnp.array(prefix, jnp.int32))
+                    pref = self._prefill_fn(bucket)(self.params, toks)
+                    self.caches = self._insert(self.caches, pref, slot)
             self.slot_pos[slot] = len(ptoks) - 1
             self.slot_req[slot] = req
             req.t_admit = time.perf_counter()
-            self.trace_events.append({
+            obs.metrics.counter("serving.admitted")
+            self._trace({
                 "type": "admit", "rid": req.rid, "t": req.t_admit,
                 "slot": slot, "prefix_len": len(prefix), "bucket": bucket})
             admitted.append(req)
@@ -677,18 +713,41 @@ class ServingEngine:
         t_end = time.perf_counter()
         for r in firsts:
             r.t_first_token = t_end
-            self.trace_events.append(
+            self._trace(
                 {"type": "first_token", "rid": r.rid, "t": t_end})
         for r in out:
             r.t_finish = t_end
-            self.trace_events.append(
+            obs.metrics.counter("serving.finished")
+            self._trace(
                 {"type": "finish", "rid": r.rid, "t": t_end,
                  "tokens": len(r.generated)})
-        self.trace_events.append({
+        self._trace({
             "type": "step", "t": t_start, "dt": t_end - t_start,
             "admitted": [r.rid for r in admitted], "active": len(active),
             "queue_depth": len(self.queue)})
+        obs.metrics.counter("serving.steps")
+        obs.metrics.observe("serving.step_dt_s", t_end - t_start)
+        obs.add_span("serve.step", t_start, t_end,
+                     admitted=len(admitted), active=len(active),
+                     queue_depth=len(self.queue))
+        self.drift.observe(self.decision_step_s(), t_end - t_start,
+                           key=self._drift_machine_key())
         return out
+
+    def _drift_machine_key(self) -> str:
+        """``name@geometry_fingerprint`` of the machine the frozen plans
+        price against — the identity drift windows are keyed by (the same
+        key ``repro.measure.SampleStore`` uses for samples)."""
+        if self._drift_key is None:
+            name = (self.gemm_plans[0].machine if self.gemm_plans
+                    else "unknown")
+            try:
+                from repro.machines import resolve
+                self._drift_key = f"{name}@" \
+                    f"{resolve(name, name).geometry_fingerprint()}"
+            except Exception:
+                self._drift_key = name
+        return self._drift_key
 
     def drain(self, max_steps: int = 10_000, *,
               on_truncate: str = "raise") -> list[Request]:
@@ -721,7 +780,7 @@ class ServingEngine:
         if on_truncate == "raise":
             raise DrainTruncatedError(**state)
         self.truncated = state
-        self.trace_events.append({
+        self._trace({
             "type": "truncated", "t": time.perf_counter(), **state})
         return self.finished
 

@@ -46,8 +46,11 @@ def _traffic(args):
 
 
 def cmd_run(args) -> int:
+    from repro import obs
     from repro.simulate.server import ServiceModel, simulate_serving
 
+    if args.trace_out:
+        obs.enable()
     cfg = get_config(args.arch, smoke=args.smoke)
     service = ServiceModel.from_plans(
         cfg, batch=args.batch, machine=args.machine, dtype=args.dtype,
@@ -68,6 +71,11 @@ def cmd_run(args) -> int:
     if args.json:
         report.save(args.json)
         print(f"wrote {args.json}")
+    if args.trace_out:
+        doc = obs.save_chrome_trace(args.trace_out)
+        print(f"wrote Chrome trace to {args.trace_out} "
+              f"({doc['metadata']['spans']} spans; open in "
+              f"chrome://tracing or ui.perfetto.dev)")
     return 0 if report.finite else 1
 
 
@@ -183,6 +191,9 @@ def main(argv=None) -> int:
                    help="sim-time cutoff in seconds")
     p.add_argument("--smoke", action="store_true")
     p.add_argument("--json", default=None)
+    p.add_argument("--trace-out", default=None,
+                   help="write a Chrome-trace/Perfetto JSON of the "
+                        "simulated timeline (repro.obs spans)")
     _traffic_args(p, rate_default=100.0)
     _resilience_args(p)
     p.set_defaults(fn=cmd_run)

@@ -23,6 +23,8 @@ import itertools
 import random
 from typing import Any, Callable
 
+from repro import obs
+
 
 @dataclasses.dataclass
 class Event:
@@ -78,15 +80,21 @@ class Simulator:
         """Pop events in time order until the queue drains (or ``until`` /
         the horizon is reached).  Returns the final clock."""
         stop = until if until is not None else self.horizon
-        while self._heap:
-            t, _, ev = self._heap[0]
-            if stop is not None and t > stop:
-                self.now = stop
-                break
-            heapq.heappop(self._heap)
-            if ev.cancelled:
-                continue
-            self.now = t
-            self.events_processed += 1
-            ev.fn()
+        before = self.events_processed
+        with obs.span("sim.run", until=stop) as sp:
+            while self._heap:
+                t, _, ev = self._heap[0]
+                if stop is not None and t > stop:
+                    self.now = stop
+                    break
+                heapq.heappop(self._heap)
+                if ev.cancelled:
+                    continue
+                self.now = t
+                self.events_processed += 1
+                ev.fn()
+            sp.set(events_processed=self.events_processed - before,
+                   sim_time=self.now)
+        obs.metrics.counter("sim.events_processed",
+                            self.events_processed - before)
         return self.now

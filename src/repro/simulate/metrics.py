@@ -159,7 +159,8 @@ class Metrics:
     # -- reduction ----------------------------------------------------------
     def report(self, *, config: Mapping[str, Any] | None = None,
                max_batch: int | None = None,
-               faults: Mapping[str, Any] | None = None) -> "SimReport":
+               faults: Mapping[str, Any] | None = None,
+               drift: Mapping[str, Any] | None = None) -> "SimReport":
         done = [r for r in self.records.values() if r.done]
         shed = [r for r in self.records.values() if r.shed]
         busy = sum(s.dt for s in self.steps)
@@ -186,6 +187,7 @@ class Metrics:
             shed={"count": len(shed), "causes": causes} if shed else {},
             deadline=deadline,
             faults=dict(faults or {}),
+            drift=dict(drift or {}),
             latency=_dist(r.latency_s for r in done),
             ttft=_dist(r.ttft_s for r in done),
             wait=_dist(r.wait_s for r in done),
@@ -225,6 +227,9 @@ class SimReport:
     shed: dict = dataclasses.field(default_factory=dict)
     deadline: dict = dataclasses.field(default_factory=dict)
     faults: dict = dataclasses.field(default_factory=dict)
+    # online prediction-drift verdict (repro.obs DriftMonitor.report()):
+    # {} when the run carried no monitor, so older saved reports round-trip.
+    drift: dict = dataclasses.field(default_factory=dict)
     finish_order: list[int] = dataclasses.field(default_factory=list)
     per_request: list[dict] = dataclasses.field(default_factory=list)
 
@@ -259,7 +264,7 @@ class SimReport:
             "slot_utilization": self.slot_utilization,
             "steps": self.steps, "busy_s": self.busy_s, "span_s": self.span_s,
             "shed": self.shed, "deadline": self.deadline,
-            "faults": self.faults,
+            "faults": self.faults, "drift": self.drift,
         }
 
     def table(self) -> str:

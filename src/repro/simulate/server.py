@@ -27,6 +27,8 @@ import dataclasses
 import functools
 from typing import Any, Iterable, Iterator, Mapping
 
+from repro import obs
+from repro.obs import DriftMonitor
 from repro.serving.buckets import PREFILL_BUCKETS, bucket_cover, bucket_len
 from repro.serving.resilience import (SHED_DEADLINE_EXPIRED,
                                       SHED_DEADLINE_UNMEETABLE,
@@ -152,7 +154,9 @@ class SlotServer:
                  deadline_s: float | None = None,
                  queue_limit: int | None = None,
                  decision_step_s: float | None = None,
-                 faults: FaultScenario | str | dict | None = None):
+                 faults: FaultScenario | str | dict | None = None,
+                 drift: DriftMonitor | None = None,
+                 drift_key: str = "sim"):
         if policy not in POLICIES:
             raise ValueError(f"unknown admission policy {policy!r}; "
                              f"have {POLICIES}")
@@ -176,6 +180,11 @@ class SlotServer:
             else None
         self.slot_failures = 0
         self.throttled_steps = 0
+        # online drift: the un-perturbed model price vs what the step
+        # actually cost (measured replay times, fault-scaled costs) — the
+        # simulated analogue of the real engine's step-time monitoring.
+        self.drift = drift if drift is not None else DriftMonitor()
+        self.drift_key = drift_key
         self._stepping = False
         self._started = start_at is None
         self._step_times: Iterator[float] | None = \
@@ -203,6 +212,7 @@ class SlotServer:
         if self.queue_limit is not None \
                 and len(self.queue) >= self.queue_limit:
             self.metrics.on_shed(req.rid, self.sim.now, SHED_QUEUE_FULL)
+            obs.metrics.counter("sim.shed")
             return
         self.queue.append(_Live(req=req))
         self._kick()
@@ -252,6 +262,7 @@ class SlotServer:
             if cause is None:
                 return live
             self.metrics.on_shed(live.req.rid, self.sim.now, cause)
+            obs.metrics.counter("sim.shed")
         return None
 
     def _admit(self) -> list[_Live]:
@@ -283,13 +294,14 @@ class SlotServer:
         if not active:
             self._stepping = False
             return
+        nominal = self.service.decode_step_s + sum(
+            self.service.prefill_seconds(self._prefix_len(a.req))
+            for a in admitted)
         cost = None
         if self._step_times is not None:
             cost = next(self._step_times, None)
         if cost is None:
-            cost = self.service.decode_step_s + sum(
-                self.service.prefill_seconds(self._prefix_len(a.req))
-                for a in admitted)
+            cost = nominal
         # thermal-throttle windows scale whatever this step costs,
         # sampled at step start (DVFS changes between steps, not within)
         if self.faults is not None:
@@ -297,6 +309,11 @@ class SlotServer:
             if scale != 1.0:
                 cost *= scale
                 self.throttled_steps += 1
+                obs.metrics.counter("sim.faults.throttled_steps")
+        # what the calibration predicted vs what the step will really
+        # cost in sim time — throttles and measured replays drift, the
+        # un-faulted analytic path stays at ratio 1.0 exactly
+        self.drift.observe(nominal, cost, key=self.drift_key)
         sample = StepSample(t=t0, dt=cost, active=len(active),
                             admitted=len(admitted),
                             queue_depth=len(self.queue))
@@ -320,6 +337,7 @@ class SlotServer:
                 self.queue.appendleft(live)
                 self.metrics.on_requeue(live.req.rid, now)
                 self.slot_failures += 1
+                obs.metrics.counter("sim.faults.slot_failures")
             # advance to the next scheduled failure (an idle-slot failure
             # is a no-op but still consumes its schedule entry)
             nxt = next(self._failures, None)
@@ -377,10 +395,12 @@ def simulate_serving(service: ServiceModel, traffic: Traffic, *,
     scenario = FaultScenario.coerce(faults) if faults is not None else None
     sim = Simulator(seed=traffic.seed if seed is None else seed,
                     horizon=horizon)
+    drift_key = str((config or {}).get("machine", "sim"))
     server = SlotServer(sim, service, max_batch=max_batch, max_len=max_len,
                         policy=policy, deadline_s=deadline_s,
                         queue_limit=queue_limit,
-                        decision_step_s=decision_step_s, faults=scenario)
+                        decision_step_s=decision_step_s, faults=scenario,
+                        drift_key=drift_key)
     server.drive(traffic.requests(requests))
     surge = scenario.surge_requests() if scenario is not None else []
     if surge:
@@ -401,5 +421,6 @@ def simulate_serving(service: ServiceModel, traffic: Traffic, *,
                       "throttled_steps": server.throttled_steps,
                       "surge_requests": len(surge)}
     report = server.metrics.report(config=full, max_batch=max_batch,
-                                   faults=fault_info)
+                                   faults=fault_info,
+                                   drift=server.drift.report())
     return report
