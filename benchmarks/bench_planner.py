@@ -36,6 +36,13 @@ Workloads:
                span tracing disabled vs the span entry point stubbed out;
                asserts the disabled instrumentation costs < 2% and records
                the enabled-mode cost alongside.
+  mixed_precision_sweep
+               the Table-2 grid re-planned under three mixed-precision
+               configs on gap9-fc (``PrecisionConfig`` axis); scalar =
+               per-problem ``best_microkernel_scalar`` loop, batched =
+               ``best_microkernel_batch`` with quantize-traffic lattice
+               rows; asserts batched selections match the scalar oracle
+               and records the speedup plus the aggregate quantize share.
 
 ``BENCH_planner.json`` at the repo root is an **append-only perf
 trajectory**: every run appends one record keyed by the current git SHA
@@ -340,6 +347,43 @@ def bench_obs_overhead() -> dict:
     }
 
 
+def bench_mixed_precision_sweep() -> dict:
+    """Mixed-precision planning throughput (repro.core.precision): the
+    Table-2 grid under three per-operand dtype configs on gap9-fc.  The
+    quantize-traffic rows ride the same vectorized lattice, so the batch
+    engine must keep both its speedup and its bit-identical selections."""
+    from repro import machines
+    from repro.core.precision import PrecisionConfig
+    from repro.gemm.api import GemmProblem
+
+    gap9 = machines.get("gap9-fc")
+    configs = ["int8xint8", "int4xint8->int32", "f32xint8->int32"]
+    probs = [GemmProblem.coerce((r.m, r.n, r.k), default_dtype="int8")
+             .with_precision(PrecisionConfig.parse(c)).as_problem()
+             for c in configs for r in TABLE2]
+
+    def scalar():
+        return [[best_microkernel_scalar(gap9, v, p) for p in probs]
+                for v in Variant]
+
+    def batched():
+        return [best_microkernel_batch(gap9, v, probs) for v in Variant]
+
+    s_out, s_t = _best_of(scalar)
+    b_out, b_t = _best_of(batched)
+    quant_s = total_s = 0.0
+    for srow, brow in zip(s_out, b_out):
+        for s, b in zip(srow, brow):
+            assert s.micro_kernel == b.micro_kernel, "selection drift"
+            assert s.total == b.total, "cost drift"
+            quant_s += s.grouped()["quantize"]
+            total_s += s.total
+    return {"scalar_s": s_t, "batched_s": b_t, "speedup": s_t / b_t,
+            "problems": len(probs), "grid_points": len(probs) * 3,
+            "precision_configs": configs,
+            "quantize_share": quant_s / total_s}
+
+
 def main() -> None:
     table2 = bench_table2_gap8()
     allarch = bench_allarch_tpu()
@@ -349,6 +393,7 @@ def main() -> None:
     faults = bench_sim_faults()
     frontier = bench_design_frontier()
     obs_tax = bench_obs_overhead()
+    mixed = bench_mixed_precision_sweep()
     combined_scalar = table2["scalar_s"] + allarch["scalar_s"]
     combined_batched = table2["batched_s"] + allarch["batched_s"]
     report = {
@@ -360,6 +405,7 @@ def main() -> None:
             "sim_faults": faults,
             "design_frontier": frontier,
             "obs_overhead": obs_tax,
+            "mixed_precision_sweep": mixed,
         },
         "measure_fidelity": fidelity,
         "combined": {
@@ -387,7 +433,9 @@ def main() -> None:
           f"{frontier['designs_per_s']:.0f} designs/s "
           f"({frontier['frontier']}/{frontier['designs']} on frontier); "
           f"obs tax {obs_tax['disabled_overhead_pct']:.2f}% disabled / "
-          f"{obs_tax['enabled_overhead_pct']:.1f}% enabled "
+          f"{obs_tax['enabled_overhead_pct']:.1f}% enabled; "
+          f"mixed-precision sweep {mixed['speedup']:.1f}x batched "
+          f"({mixed['quantize_share']:.0%} quantize share) "
           f"(record {sha[:12]} appended to {os.path.abspath(OUT_PATH)}; "
           f"{len(trajectory['records'])} records in trajectory)")
 

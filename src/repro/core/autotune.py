@@ -32,7 +32,8 @@ from repro.core.tpu_model import (
     TpuCost,
     estimate,
     estimate_batch,
-    machine_peak,
+    machine_peak,  # noqa: F401  (re-exported; shape_peak supersedes it here)
+    shape_peak,
     vmem_required,
     vmem_required_batch,
 )
@@ -147,14 +148,23 @@ def _solve_batch(shapes: Sequence[GemmShape], overlap: bool,
     s_bytes = np.array([DTYPE_BYTES[s.dtype] for s in shapes],
                        np.int64)[:, None]
     sub = np.array([SUBLANE[s.dtype] for s in shapes], np.int64)[:, None]
-    peak = np.array([machine_peak(machine, s.dtype) for s in shapes],
+    peak = np.array([shape_peak(machine, s) for s in shapes],
                     np.float64)[:, None]
     acc = np.array([s.accumulate for s in shapes], bool)[:, None]
     bm, bn, bk, inner = _lattice()
 
+    # per-shape quantize ratios; None (no mixed shape) keeps the plain path.
+    ratios = [s.mixed_precision.quant_ratios(DTYPE_BYTES[s.dtype])
+              if s.mixed_precision is not None else (0.0, 0.0, 0.0)
+              for s in shapes]
+    quant = None
+    if any(any(r > 0.0 for r in t) for t in ratios):
+        qr = np.array(ratios, np.float64)
+        quant = (qr[:, 0:1], qr[:, 1:2], qr[:, 2:3])
+
     mask = _feasible_mask(m, n, k, s_bytes, machine.capacity("L1"))
     costs = estimate_batch(m, n, k, s_bytes, sub, peak, bm, bn, bk, inner,
-                           accumulate=acc, machine=machine)
+                           accumulate=acc, machine=machine, quant=quant)
     totals = np.where(mask, costs.total(overlap), np.inf)
     idx = np.argmin(totals, axis=1)
     feasible = mask.any(axis=1)
@@ -185,8 +195,9 @@ def _cache_key(shape: GemmShape, overlap: bool,
                machine: MachineSpec) -> tuple:
     # cache_token (name@content-fingerprint), not the bare name: same-named
     # machines with different rate tables must not share tile decisions.
+    pc = shape.precision
     return (shape.m, shape.n, shape.k, shape.dtype, shape.accumulate,
-            overlap, machine.cache_token)
+            None if pc is None else pc.key(), overlap, machine.cache_token)
 
 
 def clear_tune_cache() -> None:
@@ -269,7 +280,11 @@ class Manifest:
 
     @staticmethod
     def key(shape: GemmShape) -> str:
-        return f"{shape.m}x{shape.n}x{shape.k}:{shape.dtype}"
+        base = f"{shape.m}x{shape.n}x{shape.k}:{shape.dtype}"
+        # mixed-precision decisions get their own manifest namespace; plain
+        # shapes keep the historical key so existing manifests stay valid.
+        pc = shape.precision
+        return base if pc is None else f"{base}|{pc.key()}"
 
     def lookup(self, shape: GemmShape) -> TileConfig | None:
         e = self._entries.get(self.key(shape))

@@ -30,6 +30,7 @@ from repro.core.variants import (
     derive_blocking,
     derive_blocking_batch,
     feasible_microkernels,
+    quant_ratio_arrays,
     traffic_terms,
     traffic_terms_batch,
 )
@@ -65,9 +66,12 @@ class CostBreakdown:
     def grouped(self) -> dict[str, float]:
         """Group components the way the paper's figures do."""
         g = {"packing": 0.0, "unpacking": 0.0, "copy": 0.0,
-             "stream_M": 0.0, "stream_L1": 0.0, "stream_L2": 0.0, "arith": 0.0}
+             "stream_M": 0.0, "stream_L1": 0.0, "stream_L2": 0.0,
+             "arith": 0.0, "quantize": 0.0}
         for name, secs in self.components.items():
-            if name.startswith("pack"):
+            if name.startswith("quant_"):
+                g["quantize"] += secs
+            elif name.startswith("pack"):
                 g["packing"] += secs
             elif name.startswith("unpack"):
                 g["unpacking"] += secs
@@ -111,8 +115,14 @@ def simulate(
         origins[t.name] = t.origin
 
     # per-micro-kernel refinement (paper §4) when the spec carries a table;
-    # otherwise exactly arith_rate[dtype].
-    arith_rate = machine.arith_rate_for(prob.dtype, mk)
+    # otherwise exactly arith_rate[dtype].  Mixed-precision problems look
+    # up the machine's rates_mixed table by config key, falling back to the
+    # uniform rate of the compute dtype.
+    pc = prob.precision
+    if pc is not None and not pc.is_uniform:
+        arith_rate = machine.arith_rate_mixed(pc.key(), prob.dtype, mk)
+    else:
+        arith_rate = machine.arith_rate_for(prob.dtype, mk)
     components["arith"] = prob.flops / arith_rate
 
     return CostBreakdown(
@@ -205,7 +215,8 @@ def simulate_batch(
     m, n, k, s = _problem_arrays(probs)
     blk = derive_blocking_batch(variant, rows, cols, machine, m, n, k, s)
     terms = traffic_terms_batch(variant, rows, cols, blk, m, n, k, s,
-                                policy=policy)
+                                policy=policy,
+                                quant=quant_ratio_arrays(probs))
     total = None
     for t in terms:
         base = machine.rate(t.origin, t.dest)
@@ -216,17 +227,41 @@ def simulate_batch(
         comp = t.bytes / rate
         total = comp if total is None else total + comp
     dtypes = [p.dtype for p in probs]
+    # arithmetic rates mirror the scalar lookup chain per problem: mixed
+    # configs via rates_mixed (constant across candidates on a table hit,
+    # per-mk refined through the uniform fallback otherwise), uniform
+    # problems exactly as before.
+    def _mixed_of(p):
+        pc = p.precision
+        return pc if pc is not None and not pc.is_uniform else None
     if machine.arith_per_mk and any(dt in machine.arith_per_mk
                                     for dt in dtypes):
         # per-candidate rates: (P, C) lattice of the paper-§4 refinement,
-        # one lookup per (dtype, micro-kernel) pair, broadcast over problems.
-        rows_by_dt = {dt: np.array([machine.arith_rate_for(dt, mk)
+        # one lookup row per (precision, dtype) pair, broadcast over
+        # problems.
+        rows_by_key: dict[tuple, np.ndarray] = {}
+        rate_rows = []
+        for p in probs:
+            pc = _mixed_of(p)
+            key = (pc.key() if pc else None, p.dtype)
+            row = rows_by_key.get(key)
+            if row is None:
+                if pc is not None:
+                    row = np.array(
+                        [machine.arith_rate_mixed(pc.key(), p.dtype, mk)
+                         for mk in cands], np.float64)
+                else:
+                    row = np.array([machine.arith_rate_for(p.dtype, mk)
                                     for mk in cands], np.float64)
-                      for dt in set(dtypes)}
-        arith_rate = np.stack([rows_by_dt[dt] for dt in dtypes], axis=0)
+                rows_by_key[key] = row
+            rate_rows.append(row)
+        arith_rate = np.stack(rate_rows, axis=0)
     else:
-        arith_rate = np.array([machine.arith_rate[dt] for dt in dtypes],
-                              np.float64)[:, None]
+        arith_rate = np.array(
+            [machine.arith_rate_mixed(pc.key(), p.dtype)
+             if (pc := _mixed_of(p)) is not None
+             else machine.arith_rate[p.dtype]
+             for p in probs], np.float64)[:, None]
     arith = 2.0 * (m * n * k).astype(np.float64) / arith_rate
     total = np.broadcast_to(total + arith, (len(probs), len(cands)))
     return CostBatch(variant=variant, micro_kernels=cands, total=total,

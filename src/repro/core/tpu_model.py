@@ -26,11 +26,14 @@ import math
 import numpy as np
 
 from repro.core.hardware import MachineSpec, V5E_MXU  # noqa: F401
+from repro.core.precision import PrecisionConfig
 from repro.machines import registry as _machines
 
-DTYPE_BYTES = {"int8": 1, "bf16": 2, "f32": 4}
+# int4 is modelled at one byte (unpacked panels — see core/precision.py);
+# its advantage over int8 is purely the arithmetic rate.
+DTYPE_BYTES = {"int4": 1, "int8": 1, "bf16": 2, "f32": 4}
 # minimal TPU tile (sublane, lane) per dtype — misaligned blocks get padded.
-SUBLANE = {"int8": 32, "bf16": 16, "f32": 8}
+SUBLANE = {"int4": 32, "int8": 32, "bf16": 16, "f32": 8}
 LANE = 128
 
 
@@ -58,10 +61,21 @@ class GemmShape:
     k: int
     dtype: str = "bf16"
     accumulate: bool = False   # C += A.B (paper semantics) vs C = A.B
+    # per-operand dtypes for mixed-precision GEMM; None (or a uniform
+    # config) is the plain single-dtype path.  ``dtype`` stays the compute
+    # (narrower-operand) dtype — the MXU path the arithmetic runs on.
+    precision: PrecisionConfig | None = None
 
     @property
     def flops(self) -> float:
         return 2.0 * self.m * self.n * self.k
+
+    @property
+    def mixed_precision(self) -> PrecisionConfig | None:
+        """The shape's precision config when it is genuinely mixed (uniform
+        configs are the plain dtype path and return None)."""
+        pc = self.precision
+        return pc if pc is not None and not pc.is_uniform else None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -76,6 +90,9 @@ class TpuCost:
     t_hbm: float
     t_vmem: float
     mxu_efficiency: float     # useful fraction of MXU-padded FLOPs
+    # quantize/dequantize HBM traffic of a mixed-precision shape (already
+    # included in hbm_bytes; kept separate for attribution/explain).
+    quant_bytes: float = 0.0
 
     @property
     def total_no_overlap(self) -> float:
@@ -118,6 +135,23 @@ def machine_peak(machine: MachineSpec, dtype: str) -> float:
     tag = "bf16" if dtype == "f32" else dtype
     rate = machine.arith_rate.get(tag)
     return rate if rate is not None else max(machine.arith_rate.values())
+
+
+def machine_peak_mixed(machine: MachineSpec,
+                       precision: PrecisionConfig) -> float:
+    """Arithmetic peak for a mixed-precision config: the spec's
+    ``rates_mixed`` entry for the config key when calibrated, else
+    :func:`machine_peak` of the compute (narrower-operand) dtype."""
+    rate = machine.rates_mixed.get(precision.key())
+    return rate if rate is not None \
+        else machine_peak(machine, precision.compute_dtype)
+
+
+def shape_peak(machine: MachineSpec, shape: GemmShape) -> float:
+    """Per-shape arithmetic peak honouring an attached mixed precision."""
+    pc = shape.mixed_precision
+    return machine_peak_mixed(machine, pc) if pc is not None \
+        else machine_peak(machine, shape.dtype)
 
 
 def _peak(dtype: str) -> float:
@@ -189,18 +223,31 @@ def estimate(shape: GemmShape, tile: TileConfig,
         c_reads = s * m * n * gk
     hbm = a_bytes + b_bytes + c_writes + c_reads
 
+    # Mixed-precision shapes pay quantize/dequantize traffic at the HBM
+    # boundary: wider-than-compute operands move extra bytes proportional
+    # to their width ratio (core/precision.py).  Uniform shapes take the
+    # pre-existing path untouched.
+    pc = shape.mixed_precision
+    quant_bytes = 0.0
+    if pc is not None:
+        ra, rb, rc = pc.quant_ratios(s)
+        quant_bytes = (a_bytes * ra + b_bytes * rb
+                       + (c_writes + c_reads) * rc)
+        hbm = hbm + quant_bytes
+
     # VMEM->VREG streaming inside the kernel: each resident A/B block is read
     # once per block-matmul, plus the f32 accumulator read+written per k step.
     vmem_stream = a_bytes + b_bytes + 8.0 * m * n * gk
 
     eff = mxu_efficiency(shape, tile)
-    t_compute = shape.flops / (machine_peak(machine, shape.dtype) * eff)
+    t_compute = shape.flops / (shape_peak(machine, shape) * eff)
     t_hbm = hbm / machine.rate("M", "L1")
     t_vmem = vmem_stream / machine.rate("L1", "R")
     return TpuCost(
         shape=shape, tile=tile, hbm_bytes=hbm, vmem_bytes=vmem_stream,
         vmem_peak=vmem_required(shape, tile),
         t_compute=t_compute, t_hbm=t_hbm, t_vmem=t_vmem, mxu_efficiency=eff,
+        quant_bytes=quant_bytes,
     )
 
 
@@ -269,15 +316,19 @@ def vmem_required_batch(bm, bn, bk, elem_bytes) -> np.ndarray:
 
 def estimate_batch(m, n, k, elem_bytes, sublane, peak, bm, bn, bk, k_inner,
                    accumulate=False,
-                   machine: MachineSpec | None = None) -> TpuCostBatch:
+                   machine: MachineSpec | None = None,
+                   quant=None) -> TpuCostBatch:
     """Vectorized :func:`estimate` over problem arrays x tile arrays.
 
     Problem-side arrays (``m``, ``n``, ``k``, ``elem_bytes``, ``sublane``,
     ``peak``, ``accumulate``) and tile-side arrays (``bm``, ``bn``, ``bk``,
     ``k_inner``) must broadcast against each other — the canonical layout is
     problems as ``(P, 1)`` columns against flat ``(C,)`` candidate rows.
-    ``peak`` is the per-problem arithmetic rate (use :func:`machine_peak`
-    so non-default machines keep their own dtype tables).
+    ``peak`` is the per-problem arithmetic rate (use :func:`machine_peak` /
+    :func:`shape_peak` so non-default machines keep their own dtype tables).
+    ``quant`` is an optional ``(ra, rb, rc)`` triple of per-problem
+    quantize-ratio arrays (see ``PrecisionConfig.quant_ratios``); None is
+    exactly the pre-mixed-precision path.
     """
     machine = machine or _default_machine()
     m, n, k = (np.asarray(x, np.int64) for x in (m, n, k))
@@ -298,6 +349,12 @@ def estimate_batch(m, n, k, elem_bytes, sublane, peak, bm, bn, bk, k_inner,
     c_writes = np.where(k_inner, c_once, c_revisit)
     c_reads = np.where(k_inner, np.where(accumulate, c_once, 0.0), c_revisit)
     hbm = a_bytes + b_bytes + c_writes + c_reads
+
+    if quant is not None:
+        ra, rb, rc = (np.asarray(q, np.float64) for q in quant)
+        quant_bytes = (a_bytes * ra + b_bytes * rb
+                       + (c_writes + c_reads) * rc)
+        hbm = hbm + quant_bytes
 
     vmem_stream = a_bytes + b_bytes + 8.0 * m * n * gk
 

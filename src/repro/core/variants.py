@@ -36,6 +36,7 @@ from typing import Iterable
 import numpy as np
 
 from repro.core.hardware import MachineSpec
+from repro.core.precision import PrecisionConfig
 
 
 class Variant(str, enum.Enum):
@@ -62,6 +63,11 @@ class Problem:
     k: int
     elem_bytes: int = 1       # INT8 on the GAP8
     dtype: str = "int8"
+    # per-operand dtypes for mixed-precision GEMM; None (or a uniform
+    # config) is the plain single-dtype path with zero extra terms.
+    # ``dtype``/``elem_bytes`` stay the *compute* dtype — the narrower
+    # input operand the micro-kernel arithmetic runs at.
+    precision: PrecisionConfig | None = None
 
     @property
     def flops(self) -> float:
@@ -199,6 +205,58 @@ class TrafficTerm:
     note: str = ""
 
 
+# Which traffic terms touch an *original* operand array (A, B or the C
+# accumulator in external memory), per variant.  Mixed-precision configs
+# charge quantize/dequantize traffic exactly at these boundaries: a
+# wider-than-compute operand is converted while being packed/streamed, so
+# the term moves extra bytes proportional to the width ratio.  Inner packed
+# buffers (A_c, B_c, C_c, B_r, C_r) already hold compute-width panels and
+# carry no extra charge.
+_QUANT_OPERANDS = {
+    Variant.B3A2C0: {"pack_A": "A", "pack_B": "B", "stream_C": "C"},
+    Variant.C3B2A0: {"stream_A": "A", "pack_B": "B",
+                     "pack_C": "C", "unpack_C": "C"},
+    Variant.B3C2A0: {"stream_A": "A", "pack_B": "B",
+                     "pack_C": "C", "unpack_C": "C"},
+}
+
+
+def quant_ratio_map(prob: Problem) -> dict[str, float] | None:
+    """Per-operand quantize-traffic ratios of one problem, or None when the
+    problem is single-dtype / uniform / all-zero (no extra terms)."""
+    pc = prob.precision
+    if pc is None or pc.is_uniform:
+        return None
+    ra, rb, rc = pc.quant_ratios(prob.elem_bytes)
+    ratios = {"A": ra, "B": rb, "C": rc}
+    return ratios if any(r > 0.0 for r in ratios.values()) else None
+
+
+def _with_quant(variant: Variant, terms: list[TrafficTerm],
+                prob: Problem) -> list[TrafficTerm]:
+    """Append ``quant_<term>`` charges for wider-than-compute operands.
+
+    Each charge replays its base term's route and chunk, scaled by the
+    operand's width ratio, so the extra time is exactly ``ratio x`` the
+    base term's time — the property the mixed-precision tests assert."""
+    ratios = quant_ratio_map(prob)
+    if not ratios:
+        return terms
+    ops = _QUANT_OPERANDS[variant]
+    extra = []
+    for t in terms:
+        op = ops.get(t.name)
+        if op is None:
+            continue
+        r = ratios[op]
+        if r <= 0.0:
+            continue
+        extra.append(TrafficTerm(
+            f"quant_{t.name}", t.bytes * r, t.origin, t.dest, t.chunk,
+            note=f"{op} requantize ({r:g}x {t.name})"))
+    return terms + extra
+
+
 def _trips(x: int, b: int, policy: str) -> float:
     """Trip count of a blocked loop: exact ratio ("analytic", the paper's
     closed-form accounting) or ceil ("padded", mimicking edge tiles at full
@@ -246,7 +304,7 @@ def traffic_terms(
         add("stream_A", s * m * k * t(n, n_r), "L2", "R", None, note="A_c->regs")
         # micro-kernel: B_r (k_c x n_r) read once per ir iter.
         add("stream_B", s * k * n * t(m, m_r), "L1", "R", None, note="B_r->regs")
-        return terms
+        return _with_quant(variant, terms, prob)
 
     if variant is Variant.C3B2A0:
         m_r, k_r = mk.rows, mk.cols
@@ -265,7 +323,7 @@ def traffic_terms(
         # micro-kernel: C_r column (m_r) loaded+stored per jr iteration.
         add("stream_C", 2.0 * s * m * n * t(k, k_r), "L1", "R", None,
             note="C_r<->regs")
-        return terms
+        return _with_quant(variant, terms, prob)
 
     if variant is Variant.B3C2A0:
         m_r, k_r = mk.rows, mk.cols
@@ -283,7 +341,7 @@ def traffic_terms(
             note="C_c<->regs")
         # micro-kernel: B_r column (k_r) per jr iteration.
         add("stream_B", s * k * n * t(m, m_r), "L1", "R", None, note="B_r->regs")
-        return terms
+        return _with_quant(variant, terms, prob)
 
     raise ValueError(variant)
 
@@ -354,13 +412,58 @@ def _trips_batch(x, b, policy: str) -> np.ndarray:
     raise ValueError(policy)
 
 
+def quant_ratio_arrays(probs) -> dict[str, np.ndarray] | None:
+    """(P, 1) quantize-ratio columns per operand for a problem batch, or
+    None when no problem carries a mixed precision (the plain path).
+
+    The arrays feed :func:`traffic_terms_batch`: uniform problems get 0.0
+    rows, whose term contributions are exactly 0.0 — adding them preserves
+    bit-identity with the scalar path, which skips zero-ratio terms."""
+    rows = []
+    mixed = False
+    for p in probs:
+        ratios = quant_ratio_map(p)
+        if ratios is None:
+            rows.append((0.0, 0.0, 0.0))
+        else:
+            mixed = True
+            rows.append((ratios["A"], ratios["B"], ratios["C"]))
+    if not mixed:
+        return None
+    arr = np.array(rows, np.float64)
+    return {"A": arr[:, 0:1], "B": arr[:, 1:2], "C": arr[:, 2:3]}
+
+
+def _with_quant_batch(variant: Variant, terms: list[TrafficTermBatch],
+                      quant: dict[str, np.ndarray] | None
+                      ) -> list[TrafficTermBatch]:
+    """Vectorized :func:`_with_quant` over the (P, C) lattice."""
+    if quant is None:
+        return terms
+    ops = _QUANT_OPERANDS[variant]
+    extra = []
+    for t in terms:
+        op = ops.get(t.name)
+        if op is None:
+            continue
+        extra.append(TrafficTermBatch(
+            f"quant_{t.name}", t.bytes * quant[op], t.origin, t.dest,
+            t.chunk))
+    return terms + extra
+
+
 def traffic_terms_batch(
     variant: Variant, rows: np.ndarray, cols: np.ndarray,
     blocking: tuple[np.ndarray, np.ndarray, np.ndarray],
     m: np.ndarray, n: np.ndarray, k: np.ndarray, elem_bytes: np.ndarray,
     policy: str = "analytic",
+    quant: dict[str, np.ndarray] | None = None,
 ) -> list[TrafficTermBatch]:
-    """Vectorized :func:`traffic_terms`, in the scalar term order."""
+    """Vectorized :func:`traffic_terms`, in the scalar term order.
+
+    ``quant`` is the optional per-operand quantize-ratio column dict from
+    :func:`quant_ratio_arrays`; when given, ``quant_*`` terms are appended
+    in the scalar order (zero rows for uniform problems)."""
     m_c, n_c, k_c = blocking
     s = elem_bytes
     smn = (s * m * n).astype(np.float64)
@@ -371,17 +474,17 @@ def traffic_terms_batch(
 
     if variant is Variant.B3A2C0:
         m_r, n_r = rows, cols
-        return [
+        return _with_quant_batch(variant, [
             T("pack_B", skn, "M", "M", n_r),
             T("pack_A", smk * t(n, n_c), "M", "L2", m_r),
             T("copy_Br", skn * t(m, m_c), "M", "L1", None),
             T("stream_C", 2.0 * smn * t(k, k_c), "M", "R", None),
             T("stream_A", smk * t(n, n_r), "L2", "R", None),
             T("stream_B", skn * t(m, m_r), "L1", "R", None),
-        ]
+        ], quant)
     if variant is Variant.C3B2A0:
         m_r, k_r = rows, cols
-        return [
+        return _with_quant_batch(variant, [
             T("pack_C", smn, "M", "M", m_r),
             T("unpack_C", smn, "M", "M", m_r),
             T("pack_B", skn * t(m, m_c), "M", "L2", k_r),
@@ -389,10 +492,10 @@ def traffic_terms_batch(
             T("stream_A", smk * t(n, n_c), "M", "R", None),
             T("stream_B", skn * t(m, m_r), "L2", "R", None),
             T("stream_C", 2.0 * smn * t(k, k_r), "L1", "R", None),
-        ]
+        ], quant)
     if variant is Variant.B3C2A0:
         m_r, k_r = rows, cols
-        return [
+        return _with_quant_batch(variant, [
             T("pack_B", skn, "M", "M", k_r),
             T("pack_C", smn * t(k, k_c), "M", "L2", m_r),
             T("unpack_C", smn * t(k, k_c), "L2", "M", m_r),
@@ -400,7 +503,7 @@ def traffic_terms_batch(
             T("stream_A", smk * t(n, n_c), "M", "R", None),
             T("stream_C", 2.0 * smn * t(k, k_r), "L2", "R", None),
             T("stream_B", skn * t(m, m_r), "L1", "R", None),
-        ]
+        ], quant)
     raise ValueError(variant)
 
 

@@ -177,7 +177,7 @@ def score_designs(designs, *, cfg=None, grid: str = "table2",
                   dtype: str = "int8", batch: int = 8, max_len: int = 512,
                   backend: str = "analytic-gap8",
                   sample: int | None = None, method: str = "grid",
-                  ) -> list[DesignScore]:
+                  precision=None) -> list[DesignScore]:
     """Score each design of ``designs`` on the workload bundle.
 
     Args:
@@ -193,13 +193,20 @@ def score_designs(designs, *, cfg=None, grid: str = "table2",
             to ``plan_deployment``.
         sample / method: when ``designs`` is a space, score only a
             deterministic ``sample``-point subset ("grid" or "halton").
+        precision: optional mixed-precision workload
+            (:class:`~repro.core.precision.PrecisionConfig` or key string):
+            the grid GEMMs are planned under it (quantize traffic + mixed
+            arithmetic rates) and, with ``cfg``, the serving throughput
+            comes from that precision's deployment cell.
 
     Returns:
         One :class:`DesignScore` per design, in input (index) order.
     """
     from repro import gemm
+    from repro.core.precision import PrecisionConfig
     from repro.measure.campaign import grid_problems
 
+    pc = PrecisionConfig.coerce(precision)
     if isinstance(designs, DesignSpace) and sample is not None:
         points = designs.sample(sample, method=method)
     else:
@@ -210,22 +217,30 @@ def score_designs(designs, *, cfg=None, grid: str = "table2",
     for pt in points:
         spec = pt.spec()
         tpl = pt.template
-        res = gemm.sweep(problems, machines=[spec], backends=[backend])
+        res = gemm.sweep(problems, machines=[spec], backends=[backend],
+                         precisions=[pc] if pc is not None else None)
         grid_s = sum(r.seconds for r in res.best_per_problem().values())
         detail: dict[str, Any] = {
             "grid": grid, "grid_seconds": grid_s,
             "grid_gops": flops / grid_s / 1e9,
             "label": pt.label(), "index": pt.index,
         }
+        if pc is not None:
+            detail["precision"] = pc.key()
         throughput, unit = detail["grid_gops"], "GOPS"
         feasible, reason = True, None
         if cfg is not None:
             report = plan_point(spec, cfg, dtype=dtype, batch=batch,
-                                max_len=max_len, backend=backend)
+                                max_len=max_len, backend=backend,
+                                precision=pc)
             detail["arch"] = cfg.name
             detail["batch"] = batch
-            if report.options:
-                best = report.options[0]
+            # score the requested precision's cell (the plain dtype cell
+            # rides along in the report for reference only)
+            want = None if pc is None else pc.key()
+            opts = [o for o in report.options if o.precision == want]
+            if opts:
+                best = opts[0]
                 throughput, unit = best.tokens_per_second, "tokens/s"
                 detail["tokens_per_second"] = best.tokens_per_second
                 detail["footprint_bytes"] = best.footprint.total_bytes
@@ -243,14 +258,18 @@ def score_designs(designs, *, cfg=None, grid: str = "table2",
 
 
 def plan_point(spec, cfg, *, dtype: str = "int8", batch: int = 8,
-               max_len: int = 512, backend: str = "analytic-gap8"):
+               max_len: int = 512, backend: str = "analytic-gap8",
+               precision=None):
     """One design's deployment report for one serving cell (a thin
-    ``plan_deployment`` wrapper; generated specs pass through unregistered)."""
+    ``plan_deployment`` wrapper; generated specs pass through unregistered).
+    ``precision`` adds that mixed-precision cell next to the dtype cell."""
     from repro.serving.report import plan_deployment
 
     return plan_deployment(cfg, machines=[spec], dtypes=(dtype,),
                            batches=(batch,), max_len=max_len,
-                           backend=backend)
+                           backend=backend,
+                           precisions=() if precision is None
+                           else (precision,))
 
 
 def rerank_by_slo(frontier: Frontier, designs, cfg, *, slo,

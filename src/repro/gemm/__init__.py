@@ -26,6 +26,7 @@ See ``api.py`` for the plan/problem types, ``registry.py`` for the backend
 protocol, ``backends.py`` for the built-ins, ``cache.py`` for memoisation +
 manifest persistence, ``sweep.py`` for the sweep table.
 """
+from repro.core.precision import PrecisionConfig
 from repro.gemm.api import (
     GemmPlan,
     GemmProblem,
@@ -53,7 +54,8 @@ from repro.gemm.sweep import SweepResult, SweepRow, sweep
 
 __all__ = [
     "Backend", "GemmPlan", "GemmProblem", "NotExecutableError",
-    "SweepResult", "SweepRow", "UnknownBackendError", "VariantChoice",
+    "PrecisionConfig", "SweepResult", "SweepRow", "UnknownBackendError",
+    "VariantChoice",
     "backends", "clear_plan_cache", "default_execute_backend", "dtype_tag",
     "get_backend", "grouped_matmul", "matmul", "plan", "plan_cache_stats",
     "plan_many", "plan_model_gemms", "register_backend",

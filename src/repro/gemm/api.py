@@ -23,6 +23,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Any, Mapping
 
+from repro.core.precision import PrecisionConfig
 from repro.core.simulator import CostBreakdown
 from repro.core.tpu_model import DTYPE_BYTES, GemmShape, TpuCost
 from repro.core.variants import Blocking, MicroKernel, Problem, Variant
@@ -47,13 +48,35 @@ class GemmProblem:
     k: int
     dtype: str = "bf16"
     accumulate: bool = False
+    # per-operand dtype config (PrecisionConfig / key string / None).
+    # Normalized on construction: a *uniform* config collapses into the
+    # plain ``dtype`` path (precision becomes None — bit-identical plans,
+    # same cache identity); a *mixed* config forces ``dtype`` to its
+    # compute (narrower-operand) dtype.
+    precision: Any = None
 
     def __post_init__(self):
         if min(self.m, self.n, self.k) < 1:
             raise ValueError(f"degenerate GEMM problem {self}")
+        pc = PrecisionConfig.coerce(self.precision)
+        if pc is not None:
+            if pc.is_uniform:
+                object.__setattr__(self, "dtype", pc.a_dtype)
+                pc = None
+            else:
+                object.__setattr__(self, "dtype", pc.compute_dtype)
+            object.__setattr__(self, "precision", pc)
         if self.dtype not in DTYPE_BYTES:
             raise ValueError(
                 f"unknown dtype {self.dtype!r}; have {sorted(DTYPE_BYTES)}")
+
+    def with_precision(self, precision) -> "GemmProblem":
+        """This problem under a per-operand dtype config (None clears it);
+        construction re-normalizes ``dtype``/``precision`` as above."""
+        pc = PrecisionConfig.coerce(precision)
+        if pc is None and self.precision is None:
+            return self
+        return dataclasses.replace(self, precision=pc)
 
     @property
     def flops(self) -> float:
@@ -66,12 +89,14 @@ class GemmProblem:
     def as_shape(self) -> GemmShape:
         """The TPU cost-model view of this problem."""
         return GemmShape(m=self.m, n=self.n, k=self.k, dtype=self.dtype,
-                         accumulate=self.accumulate)
+                         accumulate=self.accumulate,
+                         precision=self.precision)
 
     def as_problem(self) -> Problem:
         """The GAP8 simulator view of this problem."""
         return Problem(m=self.m, n=self.n, k=self.k,
-                       elem_bytes=self.elem_bytes, dtype=self.dtype)
+                       elem_bytes=self.elem_bytes, dtype=self.dtype,
+                       precision=self.precision)
 
     @classmethod
     def coerce(cls, obj: Any, dtype: str | None = None,
@@ -81,9 +106,10 @@ class GemmProblem:
             p = obj
         elif isinstance(obj, GemmShape):
             p = cls(obj.m, obj.n, obj.k, dtype=obj.dtype,
-                    accumulate=obj.accumulate)
+                    accumulate=obj.accumulate, precision=obj.precision)
         elif isinstance(obj, Problem):
-            p = cls(obj.m, obj.n, obj.k, dtype=obj.dtype)
+            p = cls(obj.m, obj.n, obj.k, dtype=obj.dtype,
+                    precision=obj.precision)
         elif isinstance(obj, (tuple, list)) and len(obj) == 3:
             p = cls(int(obj[0]), int(obj[1]), int(obj[2]),
                     dtype=dtype or default_dtype)
@@ -92,7 +118,10 @@ class GemmProblem:
                 f"cannot interpret {obj!r} as a GEMM problem; pass a "
                 "GemmProblem, (m, n, k), core.variants.Problem or GemmShape")
         if dtype is not None and p.dtype != dtype:
-            p = dataclasses.replace(p, dtype=dtype)
+            # an explicit dtype override reasserts the uniform path: it
+            # replaces any attached mixed config rather than fighting the
+            # compute-dtype normalization.
+            p = dataclasses.replace(p, dtype=dtype, precision=None)
         return p
 
 
@@ -217,17 +246,29 @@ class GemmPlan:
         if isinstance(c, TpuCost):
             overlap = bool(self.provenance.get("overlap", True))
             flops = self.problem.flops
+            hbm_rate = c.hbm_bytes / c.t_hbm if c.t_hbm else None
             terms = [
                 {"name": "compute", "kind": "compute", "level": "MXU",
                  "seconds": c.t_compute, "bytes": None,
                  "rate": flops / c.t_compute if c.t_compute else None},
                 {"name": "stream_hbm", "kind": "traffic", "level": "HBM",
                  "seconds": c.t_hbm, "bytes": c.hbm_bytes,
-                 "rate": c.hbm_bytes / c.t_hbm if c.t_hbm else None},
+                 "rate": hbm_rate},
                 {"name": "stream_vmem", "kind": "traffic", "level": "VMEM",
                  "seconds": c.t_vmem, "bytes": c.vmem_bytes,
                  "rate": c.vmem_bytes / c.t_vmem if c.t_vmem else None},
             ]
+            # mixed-precision shapes: split the quantize/dequantize share
+            # out of the HBM stream so the extra traffic is attributed,
+            # keeping the terms a partition of the same totals.
+            q = getattr(c, "quant_bytes", 0.0)
+            if q:
+                t_q = c.t_hbm * (q / c.hbm_bytes) if c.hbm_bytes else 0.0
+                terms[1]["seconds"] = c.t_hbm - t_q
+                terms[1]["bytes"] = c.hbm_bytes - q
+                terms.append(
+                    {"name": "quantize", "kind": "quantize", "level": "HBM",
+                     "seconds": t_q, "bytes": q, "rate": hbm_rate})
             composition = "overlapped" if overlap else "sum"
         else:
             flops = self.problem.flops
@@ -240,7 +281,9 @@ class GemmPlan:
                 else:
                     nbytes = c.traffic_bytes.get(name)
                     terms.append(
-                        {"name": name, "kind": "traffic",
+                        {"name": name,
+                         "kind": "quantize" if name.startswith("quant_")
+                         else "traffic",
                          "level": c.origins.get(name),
                          "seconds": secs, "bytes": nbytes,
                          "rate": (nbytes / secs)
@@ -255,7 +298,9 @@ class GemmPlan:
             "backend": self.backend,
             "machine": self.machine,
             "problem": f"{self.problem.m}x{self.problem.n}x{self.problem.k}"
-                       f":{self.problem.dtype}",
+                       f":{self.problem.dtype}"
+                       + (f"|{self.problem.precision.key()}"
+                          if self.problem.precision is not None else ""),
             "composition": composition,
             "total_s": self.predicted_seconds,
             "sum_s": sum_s,

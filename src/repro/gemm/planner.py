@@ -4,6 +4,7 @@ from __future__ import annotations
 import jax
 
 from repro import obs
+from repro.core.precision import PrecisionConfig
 from repro.gemm.api import GemmPlan, GemmProblem, resolve_machine
 from repro.gemm.backends import dtype_tag, register_builtin_backends
 from repro.gemm.cache import PlanCache
@@ -16,7 +17,7 @@ _CACHE = PlanCache()
 
 def plan(problem, *, backend: str = "analytic-tpu", machine=None,
          dtype: str | None = None, policy: str = "analytic",
-         cache: bool = True, **options) -> GemmPlan:
+         precision=None, cache: bool = True, **options) -> GemmPlan:
     """Plan one GEMM: run ``backend``'s analytic model / search and freeze
     the decision.  ``plan`` is the one-problem case of :func:`plan_many`.
 
@@ -27,6 +28,11 @@ def plan(problem, *, backend: str = "analytic-tpu", machine=None,
         machine: a registry name or :class:`MachineSpec` (default: the
             backend's native target machine).
         dtype: dtype tag overriding the problem's own.
+        precision: a :class:`~repro.core.precision.PrecisionConfig` (or its
+            key string, e.g. ``"int4xint8->int32"``) applied to the problem.
+            Uniform configs normalize to the plain dtype path and plan
+            bit-identically; mixed configs add quantize/dequantize traffic
+            and use the machine's ``rates_mixed`` arithmetic table.
         policy: partial-tile accounting of the GAP8 simulator
             (``"analytic"`` — exact byte ratios — or ``"padded"`` — edge
             tiles at full-tile cost).
@@ -50,12 +56,14 @@ def plan(problem, *, backend: str = "analytic-tpu", machine=None,
             ``micro_kernel`` override without an explicit ``variant``.
     """
     return plan_many([problem], backend=backend, machine=machine,
-                     dtype=dtype, policy=policy, cache=cache, **options)[0]
+                     dtype=dtype, policy=policy, precision=precision,
+                     cache=cache, **options)[0]
 
 
 def plan_many(problems, *, backend: str = "analytic-tpu", machine=None,
               dtype: str | None = None, policy: str = "analytic",
-              cache: bool = True, **options) -> list[GemmPlan]:
+              precision=None, cache: bool = True,
+              **options) -> list[GemmPlan]:
     """Plan many GEMMs in one bulk operation.
 
     Problems are deduped before any evaluation (the dropped count is
@@ -66,8 +74,8 @@ def plan_many(problems, *, backend: str = "analytic-tpu", machine=None,
 
     Args:
         problems: iterable of anything :func:`plan`'s ``problem`` accepts.
-        backend / machine / dtype / policy / cache / **options: exactly as
-            for :func:`plan`, applied to every problem.
+        backend / machine / dtype / policy / precision / cache / **options:
+            exactly as for :func:`plan`, applied to every problem.
 
     Returns:
         One :class:`GemmPlan` per input problem, in input order; duplicate
@@ -81,6 +89,9 @@ def plan_many(problems, *, backend: str = "analytic-tpu", machine=None,
     with obs.span("gemm.plan_many", backend=b.name, machine=mspec.name,
                   problems=len(problems)) as sp:
         probs = [b.coerce_problem(p, dtype) for p in problems]
+        if precision is not None:
+            pc = PrecisionConfig.coerce(precision)
+            probs = [p.with_precision(pc) for p in probs]
         with obs.span("gemm.plan_many.dedupe"):
             unique: dict[GemmProblem, None] = {}
             for p in probs:

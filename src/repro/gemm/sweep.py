@@ -24,6 +24,7 @@ import itertools
 from typing import Any, Iterable, Sequence
 
 from repro import obs
+from repro.core.precision import PrecisionConfig
 from repro.core.simulator import CostBreakdown
 from repro.core.tpu_model import TpuCost
 from repro.gemm.api import GemmPlan, GemmProblem
@@ -43,6 +44,9 @@ class SweepRow:
     micro_kernel: str | None
     plan: GemmPlan
     scenario: str | None = None
+    # precision-axis tag: the PrecisionConfig key ("int4xint8->int32") this
+    # row was planned under, or None for the plain dtype axis.
+    precision: str | None = None
 
     @property
     def selection(self) -> Any:
@@ -70,6 +74,7 @@ class SweepRow:
             "policy": self.policy, "variant": self.variant,
             "micro_kernel": self.micro_kernel,
             "scenario": self.scenario,
+            "precision": self.precision,
             "selection": str(self.selection), "seconds": self.seconds,
             "breakdown": self.breakdown(),
         }
@@ -181,6 +186,7 @@ def sweep(problems: Iterable, *,
           variants: Sequence | None = None,
           micro_kernels: Sequence | None = None,
           scenarios: Sequence | None = None,
+          precisions: Sequence | None = None,
           feasible=None,
           cache: bool = True,
           **options) -> SweepResult:
@@ -215,6 +221,14 @@ def sweep(problems: Iterable, *,
             prompt-length distribution can hit, so one sweep plans every
             shape a simulated serving run will price.  ``None`` (the
             default) keeps the classic un-tagged single-scenario grid.
+        precisions: mixed-precision axis.  Each entry is a
+            :class:`~repro.core.precision.PrecisionConfig` (or its key
+            string, e.g. ``"int4xint8->int32"``) applied to every problem of
+            the grid point via ``plan_many(..., precision=)``; rows are
+            tagged with the config key in ``SweepRow.precision``.  A
+            *uniform* entry normalizes to the plain dtype path and plans
+            bit-identically to the equivalent ``dtypes`` axis point;
+            ``None`` (the default) keeps the problems' own precision.
         feasible: optional feasibility mask ``feasible(machine, dtype) ->
             bool | (bool, reason)`` evaluated once per (machine, dtype)
             combination *before* any planning work; rejected combinations
@@ -243,6 +257,8 @@ def sweep(problems: Iterable, *,
         "dtypes": _axis(dtypes), "policies": _axis(policies),
         "variants": _axis(variants), "micro_kernels": _axis(micro_kernels),
         "scenarios": _axis(scenarios),
+        "precisions": [PrecisionConfig.coerce(pc)
+                       for pc in _axis(precisions)],
     }
     before = plan_cache_stats()
     rows: list[SweepRow] = []
@@ -286,8 +302,8 @@ def sweep(problems: Iterable, *,
                                                 grid["dtypes"]):
                     if not admissible(be, ma, dt):
                         continue
-                    for po, va, mk in itertools.product(grid["policies"],
-                                                        vas, mks):
+                    for po, va, mk, pc in itertools.product(
+                            grid["policies"], vas, mks, grid["precisions"]):
                         opts = dict(options)
                         if va is not None:
                             opts["variant"] = va
@@ -295,16 +311,18 @@ def sweep(problems: Iterable, *,
                             opts["micro_kernel"] = mk
                         plans = plan_many(sc_problems, backend=be,
                                           machine=ma, dtype=dt, policy=po,
+                                          precision=pc,
                                           cache=cache, **opts)
                         va_tag = None if va is None \
                             else str(getattr(va, "value", va))
                         mk_tag = None if mk is None else \
                             (str(mk) if not isinstance(mk, (tuple, list))
                              else f"{mk[0]}x{mk[1]}")
+                        pc_tag = None if pc is None else pc.key()
                         rows.extend(SweepRow(
                             problem=p.problem, backend=be, machine=p.machine,
                             policy=po, variant=va_tag, micro_kernel=mk_tag,
-                            plan=p, scenario=sc_tag,
+                            plan=p, scenario=sc_tag, precision=pc_tag,
                         ) for p in plans)
         after = plan_cache_stats()
         # every counter the cache exposes is reported as a per-call delta

@@ -29,7 +29,7 @@ def serve_demo(arch: str, *, smoke: bool = True, n_requests: int = 8,
                max_new: int = 12, max_batch: int = 4, max_len: int = 256,
                ckpt_dir: str | None = None, seed: int = 0,
                autoconfigure: bool = False, machine: str | None = None,
-               memory: bool = True, slo=None, traffic=None,
+               memory: bool = True, precisions=(), slo=None, traffic=None,
                deadline_s: float | None = None, queue_limit: int | None = None,
                faults=None, on_truncate: str = "raise",
                trace_path: str | None = None,
@@ -59,6 +59,7 @@ def serve_demo(arch: str, *, smoke: bool = True, n_requests: int = 8,
                                           dtypes=("bf16", "int8"),
                                           batches=(1, 2, 4, 8, 16),
                                           max_len=max_len, memory=memory,
+                                          precisions=precisions,
                                           slo=slo, traffic=traffic,
                                           faults=faults,
                                           deadline_s=deadline_s,
@@ -160,6 +161,11 @@ def main() -> None:
     ap.add_argument("--machine", default=None,
                     help="machine name/glob for --autoconfigure "
                          "(e.g. tpu-v5e, 'tpu-v5e*', 'zoo/*')")
+    ap.add_argument("--precision", nargs="*", default=None,
+                    metavar="AxB[->ACC][@kv=KV]",
+                    help="mixed-precision what-if cells for "
+                         "--autoconfigure's ranking table, e.g. "
+                         "int4xint8->int32")
     ap.add_argument("--no-memory", action="store_true",
                     help="autoconfigure on throughput alone, ignoring the "
                          "deployment-memory budget")
@@ -204,7 +210,8 @@ def main() -> None:
     serve_demo(a.arch, n_requests=a.requests, max_new=a.max_new,
                max_batch=a.max_batch, max_len=a.max_len, ckpt_dir=a.ckpt_dir,
                autoconfigure=a.autoconfigure, machine=a.machine,
-               memory=not a.no_memory, slo=slo, traffic=traffic,
+               memory=not a.no_memory, precisions=a.precision or (),
+               slo=slo, traffic=traffic,
                deadline_s=a.deadline, queue_limit=a.queue_limit,
                faults=a.faults, on_truncate=a.on_truncate,
                trace_path=a.trace, trace_out=a.trace_out)

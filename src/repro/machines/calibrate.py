@@ -251,14 +251,39 @@ class Calibrator:
                              "model")
         return self._design_pallas_batch(probs)
 
+    @staticmethod
+    def _arith_tag(p) -> str:
+        """Arithmetic design-column tag: the PrecisionConfig key for a
+        mixed-precision sample (fitted into ``rates_mixed``), the dtype
+        otherwise.  Coerced ``GemmProblem``s normalize uniform configs to
+        ``precision=None``, so ``precision is not None`` means mixed."""
+        return p.precision.key() if p.precision is not None else p.dtype
+
+    @staticmethod
+    def _check_mixed(probs, *, per_mk_arith: bool, model: str) -> None:
+        if not any(p.precision is not None for p in probs):
+            return
+        if model == "pallas":
+            raise ValueError(
+                "mixed-precision calibration samples need the 'blis' cost "
+                "model; the pallas design matrix folds quantize traffic "
+                "into hbm_bytes and cannot separate a per-config rate")
+        if per_mk_arith:
+            raise ValueError(
+                "per_mk_arith cannot be combined with mixed-precision "
+                "samples: rates_mixed is a flat per-config table, not a "
+                "per-micro-kernel one")
+
     def _design_blis_batch(self, probs, mks, per_mk_arith: bool = False,
                            overhead_per_block: bool = False):
         from repro.core.variants import (
             derive_blocking_batch,
             microkernel_invocations_batch,
+            quant_ratio_arrays,
             traffic_terms_batch,
         )
 
+        self._check_mixed(probs, per_mk_arith=per_mk_arith, model="blis")
         mach = self.template
         # per-sample (P,) arrays: micro-kernel dims align elementwise with
         # the problems, so every batched closed form broadcasts to (P,).
@@ -270,8 +295,14 @@ class Calibrator:
         s = np.array([p.elem_bytes for p in probs], np.int64)
         blk = derive_blocking_batch(self.variant, rows, cols, mach,
                                     m, n, k, s)
+        # quant ratios come as (P, 1) lattice columns; this design matrix
+        # broadcasts everything at (P,), so squeeze them to match.
+        qa = quant_ratio_arrays(probs)
+        if qa is not None:
+            qa = {op: col[:, 0] for op, col in qa.items()}
         terms = traffic_terms_batch(self.variant, rows, cols, blk,
-                                    m, n, k, s, policy=self.policy)
+                                    m, n, k, s, policy=self.policy,
+                                    quant=qa)
         cols_map: dict[str, np.ndarray] = {}
         for t in terms:
             key = (f"{_RATE}{mach.level(t.origin)}->"
@@ -294,8 +325,9 @@ class Calibrator:
                                 for p, mk in zip(probs, mks)], np.float64)
                 cols_map[f"{_ARITH}{dt}@{mk_s}"] = sel * flops
         else:
-            for dt in sorted({p.dtype for p in probs}):
-                sel = np.array([p.dtype == dt for p in probs], np.float64)
+            for dt in sorted({self._arith_tag(p) for p in probs}):
+                sel = np.array([self._arith_tag(p) == dt for p in probs],
+                               np.float64)
                 cols_map[f"{_ARITH}{dt}"] = sel * flops
         if overhead_per_block:
             cols_map[OVERHEAD_COL] = np.broadcast_to(
@@ -308,6 +340,8 @@ class Calibrator:
 
     def _design_pallas_batch(self, probs):
         from repro.core.autotune import tune_batch
+
+        self._check_mixed(probs, per_mk_arith=False, model="pallas")
         from repro.core.tpu_model import (
             DTYPE_BYTES,
             GridOrder,
@@ -358,6 +392,8 @@ class Calibrator:
         oracle the vectorized :meth:`design_matrix` must agree with
         (the tests assert exact equality)."""
         probs = self._coerce_problems(problems)
+        self._check_mixed(probs, per_mk_arith=per_mk_arith,
+                          model=self.model)
         mach = self.template
         cols_map: dict[str, list[float]] = {}
         rows_acc: list[dict[str, float]] = []
@@ -381,7 +417,7 @@ class Calibrator:
                         coeff = coeff * (mach.reference_chunk / t.chunk)
                     row[key] = row.get(key, 0.0) + coeff
                 arith_key = f"{_ARITH}{p.dtype}@{mk}" if per_mk_arith \
-                    else f"{_ARITH}{p.dtype}"
+                    else f"{_ARITH}{self._arith_tag(p)}"
                 row[arith_key] = pr.flops
                 if overhead_per_block:
                     row[OVERHEAD_COL] = microkernel_invocations(
@@ -405,10 +441,20 @@ class Calibrator:
                         c.vmem_bytes,
                     f"{_ARITH}{tag}": shape.flops / c.mxu_efficiency,
                 })
+        arith_keys: list[str] = []
         for row in rows_acc:
             for key in row:
-                if key != OVERHEAD_COL:     # always the last column, as in
-                    cols_map.setdefault(key, [])  # the batched builder
+                if key == OVERHEAD_COL:     # always the last column, as in
+                    continue                # the batched builder
+                if key.startswith(_ARITH):
+                    if key not in arith_keys:
+                        arith_keys.append(key)
+                else:
+                    cols_map.setdefault(key, [])
+        # shared arith columns are sorted by tag in the batched builder;
+        # per-mk columns keep first-seen sample order there too.
+        for key in (arith_keys if per_mk_arith else sorted(arith_keys)):
+            cols_map.setdefault(key, [])
         if overhead_per_block:
             cols_map.setdefault(OVERHEAD_COL, [])
         names = list(cols_map)
@@ -427,6 +473,10 @@ class Calibrator:
             o, _, d = col[len(_RATE):].partition("->")
             return self.template.transfer_rates[(o, d)]
         dt, sep, mk_s = col[len(_ARITH):].partition("@")
+        if "->" in dt:           # mixed-precision column, key "AxB->ACC"
+            from repro.core.precision import PrecisionConfig
+            return self.template.arith_rate_mixed(
+                dt, PrecisionConfig.parse(dt).compute_dtype)
         return self.template.arith_rate_for(dt, mk_s if sep else None)
 
     # -- the fit --------------------------------------------------------------
@@ -453,6 +503,11 @@ class Calibrator:
             micro_kernels: per-sample micro-kernels (BLIS model).  Pass a
                 set spanning several shapes — a single-mk sample set is
                 provably rank-deficient (see :meth:`design_matrix`).
+                Samples carrying a mixed :class:`PrecisionConfig` (BLIS
+                model only) contribute quantize-traffic coefficients to
+                the transfer-rate columns and fit one ``arith:<key>``
+                column per config, landing in the spec's ``rates_mixed``
+                table; ``per_mk_arith`` cannot be combined with them.
             name: name for the fitted spec (default: template name).
             register: land the fitted spec in the registry (source
                 ``"calibrated"``).
@@ -634,6 +689,7 @@ class Calibrator:
         arith = dict(self.template.arith_rate)
         arith_mk = {dt: dict(tab)
                     for dt, tab in self.template.arith_per_mk.items()}
+        rates_mixed = dict(self.template.rates_mixed)
 
         def assign(col: str, rate: float) -> None:
             if col == OVERHEAD_COL:
@@ -645,7 +701,9 @@ class Calibrator:
                 rates[(o, d)] = rate
             else:
                 dt, sep, mk_s = col[len(_ARITH):].partition("@")
-                if sep:
+                if "->" in dt:      # mixed config key -> rates_mixed
+                    rates_mixed[dt] = rate
+                elif sep:
                     arith_mk.setdefault(dt, {})[mk_s] = rate
                 else:
                     arith[dt] = rate
@@ -679,7 +737,7 @@ class Calibrator:
         spec = dataclasses.replace(
             self.template, name=name or self.template.name,
             transfer_rates=rates, arith_rate=arith, arith_per_mk=arith_mk,
-            provenance=prov)
+            rates_mixed=rates_mixed, provenance=prov)
         spec.validate()
         if register:
             _registry.register(spec, overwrite=True, source="calibrated")

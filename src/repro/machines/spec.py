@@ -42,6 +42,14 @@ _DTYPE_TAG = re.compile(r"^[a-z][a-z0-9_]*$")
 _MK_TAG = re.compile(r"^[1-9][0-9]*x[1-9][0-9]*$")
 _RATE_SEP = "->"
 
+#: dtype tags a rate table may be keyed by.  ``validate()`` rejects tables
+#: with keys outside this set (a silently-accepted typo like ``"in8"`` used
+#: to make every lookup fall through to KeyError at plan time instead).
+KNOWN_DTYPES = frozenset(
+    {"int4", "int8", "int16", "int32", "f16", "bf16", "f32", "f64"})
+# mixed-rate keys are "AxB->ACC" over known dtype tags, e.g. "int4xint8->int32"
+_MIXED_KEY = re.compile(r"^([a-z0-9_]+)x([a-z0-9_]+)->([a-z0-9_]+)$")
+
 
 class SpecValidationError(ValueError):
     """A manifest / MachineSpec that violates the schema."""
@@ -95,6 +103,11 @@ class MachineSpec:
     memory_reserved_fraction: float = 0.0
     # where this spec came from: calibration fit, derivation, manifest note.
     provenance: Mapping[str, Any] = dataclasses.field(default_factory=dict)
+    # mixed-precision arithmetic rates, ops/s, keyed "AxB->ACC" (e.g.
+    # "int4xint8->int32").  Keys absent from the table fall back to the
+    # uniform ``arith_rate`` entry of the compute (narrower-operand) dtype —
+    # see :meth:`arith_rate_mixed`.
+    rates_mixed: Mapping[str, float] = dataclasses.field(default_factory=dict)
 
     def __post_init__(self):
         if not self.levels:
@@ -133,6 +146,24 @@ class MachineSpec:
             if rate is not None:
                 return rate
         return self.arith_rate[dtype]
+
+    def arith_rate_mixed(self, key: str, fallback_dtype: str | None = None,
+                         micro_kernel=None) -> float:
+        """Arithmetic rate (ops/s) for a mixed-precision configuration.
+
+        ``key`` is the ``"AxB->ACC"`` form of a ``PrecisionConfig``
+        (:meth:`PrecisionConfig.key`).  When the spec carries a calibrated
+        ``rates_mixed`` entry for the key it wins; otherwise the rate falls
+        back to :meth:`arith_rate_for` on ``fallback_dtype`` — the compute
+        (narrower-operand) dtype of the config, defaulting to the key's
+        first operand — so every machine remains plannable for every mixed
+        config its uniform table covers.
+        """
+        rate = self.rates_mixed.get(key)
+        if rate is not None:
+            return rate
+        dt = fallback_dtype or key.partition("x")[0]
+        return self.arith_rate_for(dt, micro_kernel)
 
     def memory_budget(self, level: str | None = None) -> int:
         """Usable bytes for a served model at the deployment memory level.
@@ -263,9 +294,26 @@ class MachineSpec:
         for tag, rate in self.arith_rate.items():
             if not _DTYPE_TAG.match(tag or ""):
                 raise err(f"{self.name}: bad dtype tag {tag!r} in arith_rate")
+            if tag not in KNOWN_DTYPES:
+                raise err(f"{self.name}: unknown dtype tag {tag!r} in "
+                          f"arith_rate (known: {sorted(KNOWN_DTYPES)})")
             if not (isinstance(rate, (int, float)) and math.isfinite(rate)
                     and rate > 0):
                 raise err(f"{self.name}: arith_rate[{tag}] must be a "
+                          f"positive finite number, got {rate!r}")
+        for key, rate in self.rates_mixed.items():
+            match = _MIXED_KEY.match(key or "")
+            if not match:
+                raise err(f"{self.name}: bad rates_mixed key {key!r} "
+                          f"(expected 'AxB->ACC', e.g. 'int4xint8->int32')")
+            for tag in match.groups():
+                if tag not in KNOWN_DTYPES:
+                    raise err(f"{self.name}: unknown dtype tag {tag!r} in "
+                              f"rates_mixed key {key!r} "
+                              f"(known: {sorted(KNOWN_DTYPES)})")
+            if not (isinstance(rate, (int, float)) and math.isfinite(rate)
+                    and rate > 0):
+                raise err(f"{self.name}: rates_mixed[{key}] must be a "
                           f"positive finite number, got {rate!r}")
         for tag, table in self.arith_per_mk.items():
             if tag not in self.arith_rate:
@@ -318,6 +366,9 @@ class MachineSpec:
         if self.arith_per_mk:
             d["arith_per_mk"] = {tag: {mk: float(r) for mk, r in tab.items()}
                                  for tag, tab in self.arith_per_mk.items()}
+        if self.rates_mixed:
+            d["rates_mixed"] = {k: float(v)
+                                for k, v in self.rates_mixed.items()}
         if self.level_aliases:
             d["level_aliases"] = dict(self.level_aliases)
         if self.deployment_level or self.memory_reserved_fraction:
@@ -357,6 +408,9 @@ class MachineSpec:
                                     for mk, r in dict(tab).items()}
                               for tag, tab in
                               dict(d.get("arith_per_mk") or {}).items()},
+                rates_mixed={k: float(v)
+                             for k, v in
+                             dict(d.get("rates_mixed") or {}).items()},
                 reference_chunk=int(d.get("reference_chunk", 4)),
                 elem_bytes=int(d.get("elem_bytes", 1)),
                 num_vector_registers=int(d.get("num_vector_registers", 32)),
@@ -415,6 +469,7 @@ class MachineSpec:
             arith_rate={k: r * arith for k, r in self.arith_rate.items()},
             arith_per_mk={tag: {mk: r * arith for mk, r in tab.items()}
                           for tag, tab in self.arith_per_mk.items()},
+            rates_mixed={k: r * arith for k, r in self.rates_mixed.items()},
         )
 
     def with_capacities(self, name: str | None = None,
@@ -443,6 +498,17 @@ class MachineSpec:
                    if dt not in rates}
         return self._derive(name, "+dtypes", {"with_dtype_rates": dict(rates)},
                             arith_rate=merged, arith_per_mk=kept_mk)
+
+    def with_mixed_rates(self, rates: Mapping[str, float],
+                         name: str | None = None) -> "MachineSpec":
+        """Merge entries into the mixed-precision rate table, e.g.
+        ``spec.with_mixed_rates({"int4xint8->int32": 2.0e10})``.  Keys are
+        the ``"AxB->ACC"`` form (they contain ``->``, hence a positional
+        mapping rather than keyword arguments)."""
+        merged = dict(self.rates_mixed)
+        merged.update({k: float(v) for k, v in rates.items()})
+        return self._derive(name, "+mixed", {"with_mixed_rates": dict(rates)},
+                            rates_mixed=merged).validate()
 
     def with_memory(self, name: str | None = None, *,
                     deployment_level: str | None = None,

@@ -28,7 +28,7 @@ def cmd_plan(args) -> int:
     report = plan_deployment(
         cfg, machines=args.machine, dtypes=args.dtypes,
         batches=args.batches, max_len=args.max_len, backend=args.backend,
-        memory=not args.no_memory)
+        memory=not args.no_memory, precisions=args.precision or ())
     print(f"deployment plan for {cfg.name} (max_len={args.max_len}, "
           f"native dtype {report.native_dtype})")
     print(report.table(limit=args.limit))
@@ -80,6 +80,10 @@ def main(argv=None) -> int:
     p.add_argument("--backend", default="analytic-tpu")
     p.add_argument("--no-memory", action="store_true",
                    help="skip the memory-budget pruning (throughput only)")
+    p.add_argument("--precision", nargs="*", default=None,
+                   metavar="AxB[->ACC][@kv=KV]",
+                   help="extra mixed-precision what-if cells, e.g. "
+                        "int8xint8 int4xint8->int32 bf16xint8->f32@kv=int8")
     p.add_argument("--smoke", action="store_true",
                    help="plan the smoke-size reduction of the arch")
     p.add_argument("--limit", type=int, default=12)

@@ -240,6 +240,7 @@ class ServingEngine:
                       backend: str = "analytic-tpu",
                       memory: bool = True,
                       kv_dtype: str | None = None,
+                      precisions=(),
                       slo=None, traffic=None,
                       robust: bool = False, faults=None,
                       deadline_s: float | None = None,
@@ -279,6 +280,12 @@ class ServingEngine:
             memory: enforce the deployment-memory budget (default True);
                 False restores the pre-memory throughput-only grid.
             kv_dtype: KV-cache dtype override for the footprint model.
+            precisions: extra mixed-precision what-if cells
+                (:class:`~repro.core.precision.PrecisionConfig` objects or
+                key strings like ``"int4xint8->int32"``), forwarded to
+                :func:`~repro.serving.report.plan_deployment`.  Like
+                what-if dtypes they inform the ranking only — the frozen
+                operating point always comes from a plain-dtype cell.
             slo: optional service-level objective (a
                 :class:`repro.simulate.SLO`, kwargs dict, or bare p99
                 latency bound).  When given, the memory-feasible cells are
@@ -331,7 +338,7 @@ class ServingEngine:
         report = plan_deployment(
             lm.cfg, machines=machine, dtypes=dtypes, batches=batches,
             max_len=max_len, backend=backend, memory=memory,
-            kv_dtype=kv_dtype)
+            kv_dtype=kv_dtype, precisions=precisions)
         if faults is not None:
             robust = True
         if robust and slo is None:

@@ -23,6 +23,7 @@ from typing import Any, Sequence
 
 from repro import gemm as gemm_api
 from repro.configs.base import ModelConfig
+from repro.core.precision import DTYPE_BITS, PrecisionConfig
 from repro.machines import registry as _machines
 from repro.serving.footprint import Footprint, footprint
 
@@ -82,6 +83,11 @@ class DeploymentOption:
     budget_bytes: int
     rows: tuple = ()        # the sweep rows (with plans) behind this point
     sim: Any = None         # per-policy simulated metrics (SLO mode)
+    # mixed-precision cells: the PrecisionConfig key (None for the plain
+    # dtype axis) and the bits-based accuracy proxy the ranking table shows
+    # next to throughput (1.0 = full precision, 0.5 = int8, 0.25 = int4).
+    precision: str | None = None
+    accuracy_proxy: float = 1.0
 
     @property
     def headroom_bytes(self) -> int:
@@ -102,6 +108,8 @@ class DeploymentOption:
             "budget_bytes": self.budget_bytes,
             "headroom_bytes": self.headroom_bytes,
             "headroom_fraction": self.headroom_fraction,
+            "precision": self.precision,
+            "accuracy_proxy": self.accuracy_proxy,
         }
         if self.sim is not None:
             out["sim"] = self.sim
@@ -161,12 +169,15 @@ class DeploymentReport:
     def select(self) -> DeploymentOption:
         """The operating point autoconfigure freezes: best among the
         model's native-dtype options when any survive (the engine really
-        decodes in that dtype; what-if dtypes inform the ranking only),
-        otherwise best overall."""
-        try:
-            return self.best(dtype=self.native_dtype)
-        except ValueError:
-            return self.best()
+        decodes in that dtype; what-if dtypes and mixed-precision cells
+        inform the ranking only), otherwise best overall."""
+        for o in self.options:
+            if o.precision is None and o.dtype == self.native_dtype:
+                return o
+        for o in self.options:
+            if o.precision is None:
+                return o
+        return self.best()
 
     def per_machine_best(self) -> dict[str, DeploymentOption]:
         """Best option per machine, in rank order (dict preserves it)."""
@@ -185,12 +196,13 @@ class DeploymentReport:
     def table(self, limit: int | None = None) -> str:
         """Human-readable ranked table (options, then rejection summary)."""
         gib = 1024.0 ** 3
-        lines = ["rank machine            dtype batch  tok/s      "
-                 "footprint   headroom"]
+        lines = ["rank machine            dtype              batch  tok/s "
+                 "     acc   footprint   headroom"]
         for i, o in enumerate(self.options[:limit], 1):
             lines.append(
-                f"{i:<4} {o.machine:<18} {o.dtype:<5} {o.batch:<6}"
+                f"{i:<4} {o.machine:<18} {o.dtype:<18} {o.batch:<6}"
                 f"{o.tokens_per_second:<10.3g} "
+                f"{o.accuracy_proxy:<5.2f} "
                 f"{o.footprint.total_bytes / gib:>8.3f}Gi "
                 f"{o.headroom_fraction:>7.1%}")
         if limit is not None and len(self.options) > limit:
@@ -239,7 +251,8 @@ def plan_deployment(cfg: ModelConfig, *,
                     max_len: int = 512,
                     backend: str = "analytic-tpu",
                     memory: bool = True,
-                    kv_dtype: str | None = None) -> DeploymentReport:
+                    kv_dtype: str | None = None,
+                    precisions: Sequence = ()) -> DeploymentReport:
     """Rank every feasible ``(machine, dtype, batch)`` serving cell.
 
     Args:
@@ -257,6 +270,18 @@ def plan_deployment(cfg: ModelConfig, *,
             throughput-only behaviour, kept for what-ifs and tests).
         kv_dtype: KV-cache dtype override, forwarded to
             :func:`repro.serving.footprint.footprint`.
+        precisions: extra mixed-precision cells, each a
+            :class:`~repro.core.precision.PrecisionConfig` or key string
+            (``"int4xint8->int32"``).  Each config adds one column per
+            machine/batch next to the plain ``dtypes`` axis: weights are
+            footprinted in the config's B (weights) dtype, the KV cache in
+            its ``kv_dtype`` (falling back to ``kv_dtype``/serving-dtype
+            rules), the decode GEMMs are planned with quantize traffic and
+            mixed arithmetic rates, and the option carries the config key
+            in ``DeploymentOption.precision`` plus its bits-based
+            ``accuracy_proxy`` so the ranking reads as a
+            throughput-vs-memory-vs-accuracy frontier.  ``select()`` never
+            freezes a mixed cell (they inform the ranking only).
 
     Returns:
         A :class:`DeploymentReport` with options ranked by predicted decode
@@ -277,6 +302,7 @@ def plan_deployment(cfg: ModelConfig, *,
     if not dtypes or not batches:
         raise ValueError("plan_deployment needs non-empty dtypes and "
                          "batches axes")
+    pcs = [PrecisionConfig.coerce(p) for p in precisions]
     native = dtype_tag(cfg.compute_dtype)
     default_machine = get_backend(backend).default_machine
     # expand_many canonicalizes names/globs; MachineSpec entries (possibly
@@ -334,11 +360,52 @@ def plan_deployment(cfg: ModelConfig, *,
                 seconds_per_step=step,
                 tokens_per_second=(batch / step) if step else float("inf"),
                 footprint=fps[dt], budget_bytes=budgets[ma],
-                rows=tuple(rows)))
+                rows=tuple(rows),
+                accuracy_proxy=min(1.0, DTYPE_BITS.get(dt, 16) / 16.0)))
+
+        # mixed-precision cells ride the same machinery: one sweep per
+        # config (the precision axis replaces the dtype axis — the config
+        # pins every operand dtype itself), footprinted with weights in the
+        # B-operand dtype and the cache in the config's kv_dtype.
+        for pc in pcs:
+            label = pc.key()
+            fp = footprint(cfg, batch=batch, max_len=max_len,
+                           dtype=pc.b_dtype,
+                           kv_dtype=pc.kv_dtype or kv_dtype)
+
+            def pmask(ma, dt, _fp=fp):
+                budget = budgets[tag_of(ma)]
+                if _fp.fits(budget):
+                    return True
+                return (False, diagnose_rejection(_fp, budget))
+
+            pres = gemm_api.sweep(shapes, machines=entries,
+                                  backends=[backend], precisions=[pc],
+                                  feasible=pmask if memory else None)
+            for pr in pres.pruned:
+                rejected.append(CellRejection(
+                    machine=tag_of(pr["machine"]), dtype=label,
+                    batch=batch, reason=pr["reason"],
+                    footprint_bytes=fp.total_bytes,
+                    budget_bytes=budgets[tag_of(pr["machine"])]))
+            p_by_machine: dict[str, list] = {}
+            for r in pres.rows:
+                p_by_machine.setdefault(r.machine, []).append(r)
+            for ma, rows in sorted(p_by_machine.items()):
+                step = sum(r.seconds for r in rows)
+                options.append(DeploymentOption(
+                    machine=ma, dtype=label, batch=batch,
+                    seconds_per_step=step,
+                    tokens_per_second=(batch / step) if step
+                    else float("inf"),
+                    footprint=fp, budget_bytes=budgets[ma],
+                    rows=tuple(rows), precision=label,
+                    accuracy_proxy=pc.accuracy_proxy))
     options.sort(key=_rank_key)
     return DeploymentReport(
         model=cfg.name, backend=backend, max_len=max_len,
         native_dtype=native, options=options, rejected=rejected,
         grid={"machines": sorted(budgets), "dtypes": dtypes,
-              "batches": batches, "memory": memory},
+              "batches": batches, "memory": memory,
+              "precisions": [pc.key() for pc in pcs]},
     )

@@ -217,10 +217,18 @@ def evaluate_deployment(cfg, report, *, slo, traffic: Traffic | None = None,
     for i, o in enumerate(report.options):
         key = (o.machine, o.dtype, o.batch)
         if key not in services:
+            # a mixed-precision what-if cell's dtype is its "AxB->ACC"
+            # label; plan its prefill ladder under the PrecisionConfig
+            # with the compute dtype as the plannable base tag
+            pc = o.precision
+            plan_dtype = o.dtype
+            if pc is not None:
+                from repro.core.precision import PrecisionConfig
+                plan_dtype = PrecisionConfig.parse(pc).compute_dtype
             services[key] = ServiceModel.from_plans(
                 cfg, batch=o.batch, machine=machines.get(o.machine,
                                                          o.machine),
-                dtype=o.dtype, backend=report.backend,
+                dtype=plan_dtype, precision=pc, backend=report.backend,
                 max_len=report.max_len, decode_step_s=o.seconds_per_step)
         for policy in policies:
             rep = simulate_serving(
@@ -256,8 +264,11 @@ def evaluate_deployment(cfg, report, *, slo, traffic: Traffic | None = None,
                             **({"faults": scenario.name}
                                if scenario is not None else {}),
                             "violations": violations}))
-            else:
+            elif o.precision is None:
                 candidates.append((o, policy, rep))
+            # mixed-precision what-if cells are simulated for the results
+            # table but never deployed (mirroring report.select(): the
+            # engine has no kernels to freeze for them)
 
     if attach:
         report.options = [

@@ -77,7 +77,8 @@ class ServiceModel:
     def from_plans(cls, cfg, *, batch: int, machine=None, dtype: str = "bf16",
                    backend: str = "analytic-tpu", max_len: int = 512,
                    buckets=PREFILL_BUCKETS,
-                   decode_step_s: float | None = None) -> "ServiceModel":
+                   decode_step_s: float | None = None,
+                   precision=None) -> "ServiceModel":
         """Price the cell from the analytic planner.
 
         Decode: the ``model_gemm_shapes(cfg, tokens=batch)`` workload (the
@@ -85,7 +86,10 @@ class ServiceModel:
         at ``tokens=bucket`` for every bucket a ``max_len`` prompt can
         land in.  ``decode_step_s`` overrides the decode price when the
         caller already planned it (e.g. a ``DeploymentOption``'s
-        ``seconds_per_step``), skipping the duplicate sweep.
+        ``seconds_per_step``), skipping the duplicate sweep.  ``precision``
+        (a ``PrecisionConfig`` or its key) prices a mixed-precision cell —
+        ``dtype`` must then be a plannable operand dtype (the config's
+        compute dtype), not the cell's ``AxB->ACC`` label.
         """
         from repro import gemm
         from repro.core.autotune import model_gemm_shapes
@@ -93,12 +97,12 @@ class ServiceModel:
         if decode_step_s is None:
             decode_step_s = _workload_seconds(gemm.plan_many(
                 model_gemm_shapes(cfg, tokens=batch), backend=backend,
-                machine=machine, dtype=dtype))
+                machine=machine, dtype=dtype, precision=precision))
         prefill: dict[int, float] = {}
         for b in bucket_cover(max_len, buckets):
             prefill[b] = _workload_seconds(gemm.plan_many(
                 model_gemm_shapes(cfg, tokens=b), backend=backend,
-                machine=machine, dtype=dtype))
+                machine=machine, dtype=dtype, precision=precision))
         return cls(decode_step_s=float(decode_step_s), prefill_s=prefill,
                    buckets=tuple(buckets))
 

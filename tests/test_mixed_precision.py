@@ -1,0 +1,468 @@
+"""Mixed-precision GEMM zoo: PrecisionConfig semantics, quantize-traffic
+attribution, batched-vs-scalar bit-identity under per-operand dtypes, the
+``rates_mixed`` machine schema, the sweep/deployment precision axis, and
+mixed-key calibration.
+
+The two load-bearing properties:
+
+* every *uniform* PrecisionConfig normalizes to the pre-existing
+  single-dtype path **bit-identically** (Table-2 totals ``==``, same
+  micro-kernel picks, same plan-cache identity);
+* every *mixed* config's batched engine agrees **bit-identically** with the
+  scalar simulator, with each ``quant_*`` component exactly ``ratio x`` its
+  base term's seconds.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro import gemm, machines
+from repro.core.mobilenet import TABLE2
+from repro.core.precision import (
+    DEFAULT_ACC,
+    DTYPE_BITS,
+    OPERAND_DTYPES,
+    PrecisionConfig,
+)
+from repro.core.simulator import (
+    best_microkernel_batch,
+    best_microkernel_scalar,
+    simulate,
+)
+from repro.core.variants import Variant, quant_ratio_map
+from repro.gemm.api import GemmProblem
+from repro.machines.spec import SpecValidationError
+
+
+@pytest.fixture(autouse=True)
+def _fresh_cache():
+    gemm.clear_plan_cache()
+    yield
+    gemm.clear_plan_cache()
+
+
+# ---------------------------------------------------------------------------
+# PrecisionConfig semantics
+# ---------------------------------------------------------------------------
+
+
+def test_precision_config_key_parse_roundtrip():
+    pc = PrecisionConfig("f32", "int8")
+    assert pc.acc_dtype == "int32"          # default follows compute dtype
+    assert pc.compute_dtype == "int8"
+    assert pc.key() == "f32xint8->int32"
+    assert PrecisionConfig.parse(pc.key()) == pc
+    assert PrecisionConfig.parse("int8xint8") == PrecisionConfig.uniform("int8")
+    kv = PrecisionConfig.parse("bf16xint8->f32@kv=int8")
+    assert kv.kv_dtype == "int8" and kv.acc_dtype == "f32"
+    assert str(kv) == "bf16xint8->f32@kv=int8"
+    assert PrecisionConfig.coerce(None) is None
+    assert PrecisionConfig.coerce(kv) is kv
+    assert PrecisionConfig.coerce("int4xint8") == PrecisionConfig("int4", "int8")
+
+
+def test_precision_config_rejects_bad_input():
+    with pytest.raises(ValueError, match="not an operand dtype"):
+        PrecisionConfig("fp9", "int8")
+    with pytest.raises(ValueError, match="not a\n? known dtype|not a known"):
+        PrecisionConfig("int8", "int8", acc_dtype="int64")
+    with pytest.raises(ValueError, match="kv_dtype"):
+        PrecisionConfig("int8", "int8", kv_dtype="int64")
+    with pytest.raises(ValueError, match="cannot parse"):
+        PrecisionConfig.parse("int8+int8")
+    with pytest.raises(TypeError):
+        PrecisionConfig.coerce(42)
+
+
+def test_uniform_detection_and_normalization():
+    for dt in OPERAND_DTYPES:
+        assert PrecisionConfig.uniform(dt).is_uniform
+        # GemmProblem normalizes a uniform config to the literal plain path
+        plain = GemmProblem.coerce((32, 48, 64), default_dtype=dt)
+        via_pc = plain.with_precision(PrecisionConfig.uniform(dt))
+        assert via_pc == plain and via_pc.precision is None
+    assert not PrecisionConfig("int4", "int8").is_uniform
+    # a non-default accumulator is NOT the existing path
+    assert not PrecisionConfig("int8", "int8", acc_dtype="f32").is_uniform
+    # a mixed config retags the problem with the compute dtype
+    mixed = GemmProblem.coerce((32, 48, 64), default_dtype="int8") \
+        .with_precision("f32xint8->int32")
+    assert mixed.dtype == "int8" and mixed.precision.key() == "f32xint8->int32"
+
+
+def test_quant_ratios_and_accuracy_proxy():
+    ra, rb, rc = PrecisionConfig("f32", "int8").quant_ratios(1)
+    assert (ra, rb, rc) == (3.0, 0.0, 3.0)     # f32 A + int32 acc over int8
+    ra, rb, rc = PrecisionConfig("bf16", "int8").quant_ratios(1)
+    assert (ra, rb, rc) == (1.0, 0.0, 3.0)
+    # narrower-than-compute operands are never credited
+    assert PrecisionConfig("int4", "int8").quant_ratios(1)[:2] == (0.0, 0.0)
+    assert PrecisionConfig("int4", "int8").accuracy_proxy == 0.25
+    assert PrecisionConfig("int8", "int8").accuracy_proxy == 0.5
+    assert PrecisionConfig("bf16", "bf16").accuracy_proxy == 1.0
+    assert PrecisionConfig("f32", "bf16").accuracy_proxy == 1.0
+
+
+# ---------------------------------------------------------------------------
+# Scalar simulator: quantize traffic attribution
+# ---------------------------------------------------------------------------
+
+
+def _mixed_problem(m, n, k, key, dtype="int8"):
+    return GemmProblem.coerce((m, n, k), default_dtype=dtype) \
+        .with_precision(key).as_problem()
+
+
+@pytest.mark.parametrize("variant", list(Variant))
+def test_quant_terms_are_exact_ratios_of_base_terms(variant):
+    """Each quant_<term> charges exactly ratio x the base term's seconds
+    (same route, same chunk) — the placement invariant of the cost model."""
+    mach = machines.get("gap9-fc")
+    prob = _mixed_problem(96, 80, 112, "f32xint8->int32")
+    ratios = quant_ratio_map(prob)
+    cb = best_microkernel_scalar(mach, variant, prob)
+    quant = {n: s for n, s in cb.components.items()
+             if n.startswith("quant_")}
+    assert quant, "mixed config must emit quantize terms"
+    for name, secs in quant.items():
+        base = name[len("quant_"):]
+        assert base in cb.components
+        ratio = secs / cb.components[base]
+        assert ratio == pytest.approx(max(ratios.values()), rel=1e-12) \
+            or ratio == pytest.approx(min(r for r in ratios.values()
+                                          if r > 0), rel=1e-12)
+    assert cb.grouped()["quantize"] == pytest.approx(sum(quant.values()))
+    # the plain-int8 plan has no quantize charges at all
+    plain = best_microkernel_scalar(mach, variant,
+                                    _mixed_problem(96, 80, 112, "int8xint8"))
+    assert not any(n.startswith("quant_") for n in plain.components)
+    assert plain.grouped()["quantize"] == 0.0
+
+
+def test_mixed_arith_rate_resolution_chain():
+    """rates_mixed key hit -> that rate; miss -> uniform compute-dtype rate."""
+    gap9 = machines.get("gap9-fc")
+    # table hit: the int4xint8 widening dot has its own calibrated rate
+    assert gap9.arith_rate_mixed("int4xint8->int32", "int4") == \
+        gap9.rates_mixed["int4xint8->int32"]
+    # table miss: falls back to the uniform rate of the compute dtype
+    gap8 = machines.get("gap8-fc")
+    assert not gap8.rates_mixed
+    assert gap8.arith_rate_mixed("f32xint8->int32", "int8") == \
+        gap8.arith_rate["int8"]
+    prob = _mixed_problem(64, 64, 64, "int4xint8->int32", dtype="int4")
+    cb = simulate(gap9, Variant.B3A2C0, best_microkernel_scalar(
+        gap9, Variant.B3A2C0, prob).micro_kernel, prob)
+    assert cb.arith == pytest.approx(
+        prob.flops / gap9.rates_mixed["int4xint8->int32"])
+
+
+# ---------------------------------------------------------------------------
+# Batched engine bit-identity (the property the batch engine claims)
+# ---------------------------------------------------------------------------
+
+_MIXED_KEYS = ["int8xint8", "int4xint8->int32", "f32xint8->int32",
+               "bf16xint8->int32", "int4xint4->int32"]
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2 ** 16),
+       key=st.sampled_from(_MIXED_KEYS),
+       machine=st.sampled_from(["gap8-fc", "gap9-fc"]))
+def test_batch_engine_bit_identical_under_mixed_precision(seed, key, machine):
+    rng = np.random.default_rng(seed)
+    mach = machines.get(machine)
+    pc = PrecisionConfig.parse(key)
+    if pc.compute_dtype not in mach.arith_rate \
+            and pc.key() not in mach.rates_mixed:
+        return  # machine cannot plan this config (no int4 path on gap8)
+    probs = [_mixed_problem(int(rng.integers(1, 200)),
+                            int(rng.integers(1, 200)),
+                            int(rng.integers(1, 300)), key)
+             for _ in range(4)]
+    # mix plain problems into the same batch: zero-ratio quant rows must
+    # not perturb them
+    probs += [GemmProblem.coerce((int(rng.integers(1, 200)), 64, 64),
+                                 default_dtype="int8").as_problem()]
+    for variant in Variant:
+        scalar = [best_microkernel_scalar(mach, variant, p) for p in probs]
+        batch = best_microkernel_batch(mach, variant, probs)
+        for s, b in zip(scalar, batch):
+            assert s.total == b.total            # bit-identical, not approx
+            assert s.micro_kernel == b.micro_kernel
+            assert s.components == b.components
+
+
+def test_tpu_batch_engine_matches_scalar_for_mixed():
+    from repro.core.autotune import tune_batch, tune_scalar
+
+    shapes = [GemmProblem.coerce((m, 2048, 1024), default_dtype="bf16")
+              .with_precision("bf16xint8->f32").as_shape()
+              for m in (8, 64, 256)]
+    mach = machines.get("tpu-v5e")
+    batch = tune_batch(shapes, machine=mach)
+    for shape, d in zip(shapes, batch):
+        s = tune_scalar(shape, True, mach)
+        assert d.seconds == s.seconds
+        assert d.tile == s.tile
+        assert d.cost == s.cost
+        assert d.cost.quant_bytes > 0
+
+
+# ---------------------------------------------------------------------------
+# Uniform configs are the existing dtype path, bit for bit (Table 2)
+# ---------------------------------------------------------------------------
+
+
+def test_uniform_precision_reproduces_table2_exactly():
+    mach = machines.get("gap8-fc")
+    uniform = PrecisionConfig.uniform("int8")
+    for row in TABLE2:
+        plain = row.problem
+        via_pc = GemmProblem.coerce((row.m, row.n, row.k),
+                                    default_dtype="int8") \
+            .with_precision(uniform).as_problem()
+        assert via_pc == plain
+        for variant in Variant:
+            a = best_microkernel_scalar(mach, variant, plain)
+            b = best_microkernel_scalar(mach, variant, via_pc)
+            assert a.total == b.total
+            assert a.micro_kernel == b.micro_kernel
+
+
+def test_uniform_precision_plans_share_cache_identity():
+    """plan(precision=uniform) is literally the plain plan — same cache
+    entry, same selection, same predicted seconds."""
+    plain = gemm.plan((64, 96, 128), backend="analytic-gap8",
+                      machine="gap8-fc", dtype="int8")
+    via_pc = gemm.plan((64, 96, 128), backend="analytic-gap8",
+                       machine="gap8-fc", precision="int8xint8->int32")
+    assert via_pc is plain                      # identical cache hit
+    stats = gemm.plan_cache_stats(reset=True)
+    assert stats["hits"] >= 1
+
+
+def test_explicit_dtype_override_clears_precision():
+    p = GemmProblem.coerce((8, 8, 8), default_dtype="int8") \
+        .with_precision("f32xint8->int32")
+    q = GemmProblem.coerce(p, dtype="bf16")
+    assert q.dtype == "bf16" and q.precision is None
+
+
+# ---------------------------------------------------------------------------
+# rates_mixed machine schema
+# ---------------------------------------------------------------------------
+
+
+def test_rates_mixed_roundtrip_scaled_and_fingerprint():
+    base = machines.get("gap8-fc")
+    spec = base.with_mixed_rates({"bf16xint8->int32": 2.5e9},
+                                 name="gap8-mixed-test")
+    assert spec.rates_mixed["bf16xint8->int32"] == 2.5e9
+    back = type(spec).from_json(spec.to_json())
+    assert back.rates_mixed == dict(spec.rates_mixed)
+    assert back.fingerprint() == spec.fingerprint()
+    # the table participates in the content fingerprint...
+    other = base.with_mixed_rates({"bf16xint8->int32": 5.0e9},
+                                  name="gap8-mixed-test")
+    assert other.fingerprint() != spec.fingerprint()
+    # ...but machines without one keep their pre-mixed identity: an empty
+    # table is omitted from the manifest entirely
+    assert "rates_mixed" not in base.to_json()
+    # arithmetic scaling applies to mixed rates like any compute rate
+    faster = spec.scaled(arith=2.0, name="gap8-mixed-2x")
+    assert faster.rates_mixed["bf16xint8->int32"] == 5.0e9
+
+
+def test_rates_mixed_validation():
+    base = machines.get("gap8-fc")
+    with pytest.raises(SpecValidationError, match="bad rates_mixed key"):
+        base.with_mixed_rates({"int8+int8": 1e9})
+    with pytest.raises(SpecValidationError, match="unknown dtype tag"):
+        base.with_mixed_rates({"fp9xint8->int32": 1e9})
+    with pytest.raises(SpecValidationError, match="positive finite"):
+        base.with_mixed_rates({"int4xint8->int32": -1.0})
+
+
+def test_unknown_arith_rate_dtype_raises_with_offending_key():
+    """The validate() bugfix: unknown dtype tags in arith_rate used to be
+    silently accepted (and then unreachable by any lookup)."""
+    base = machines.get("gap8-fc")
+    bad = dataclasses.replace(base, arith_rate={"int8": 1e9, "fp9": 1e9})
+    with pytest.raises(SpecValidationError, match="fp9"):
+        bad.validate()
+    # every shipped zoo manifest passes the tightened check
+    for name in machines.list_machines("zoo/*"):
+        machines.get(name).validate()
+
+
+# ---------------------------------------------------------------------------
+# The sweep precision axis
+# ---------------------------------------------------------------------------
+
+
+def test_sweep_precisions_axis_tags_rows():
+    res = gemm.sweep([(64, 96, 128)], backends=["analytic-gap8"],
+                     machines=["gap9-fc"], dtypes=["int8"],
+                     precisions=[None, "int8xint8", "f32xint8->int32"])
+    tags = {r.precision for r in res.rows}
+    assert tags == {None, "int8xint8->int32", "f32xint8->int32"}
+    by_tag = {r.precision: r for r in res.rows}
+    # uniform precision row is bit-identical to the plain dtype row
+    assert by_tag["int8xint8->int32"].plan.predicted_seconds == \
+        by_tag[None].plan.predicted_seconds
+    # the mixed row pays quantize traffic on the same machine
+    assert by_tag["f32xint8->int32"].plan.predicted_seconds > \
+        by_tag[None].plan.predicted_seconds
+    assert by_tag["f32xint8->int32"].as_dict()["precision"] == \
+        "f32xint8->int32"
+
+
+def test_plan_explain_attributes_quantize_terms():
+    p = gemm.plan((64, 96, 128), backend="analytic-gap8", machine="gap9-fc",
+                  precision="f32xint8->int32")
+    ex = p.explain()
+    quant = [t for t in ex["terms"] if t["kind"] == "quantize"]
+    assert quant and all(t["seconds"] > 0 for t in quant)
+    assert "f32xint8->int32" in ex["problem"]
+    # TPU model: the quantize share is split out of the HBM stream
+    pt = gemm.plan((256, 2048, 1024), backend="analytic-tpu",
+                   machine="tpu-v5e", precision="bf16xint8->f32")
+    ext = pt.explain()
+    quant_t = [t for t in ext["terms"] if t["kind"] == "quantize"]
+    assert len(quant_t) == 1 and quant_t[0]["seconds"] > 0
+
+
+# ---------------------------------------------------------------------------
+# Deployment ranking
+# ---------------------------------------------------------------------------
+
+
+def test_mixed_precision_changes_deployment_ranking():
+    from repro.configs import get_config
+    from repro.serving.report import plan_deployment
+
+    cfg = get_config("qwen2-1.5b", smoke=True)
+    report = plan_deployment(cfg, machines="gap9-fc", dtypes=("int8",),
+                             batches=(1, 4), backend="analytic-gap8",
+                             precisions=("int4xint8->int32",))
+    mixed = {o.batch: o for o in report.options
+             if o.precision == "int4xint8->int32"}
+    plain = {o.batch: o for o in report.options if o.precision is None}
+    assert set(mixed) == set(plain) == {1, 4}
+    # at equal batch the widening-dot rate gain (rates_mixed 2.2e10 vs int8
+    # 1.58e10 MAC/s) is outweighed by the int32-accumulator quantize
+    # traffic, so the mixed cell is strictly slower — but its batch-4 cell
+    # still outranks plain batch-1: the what-if interleaves into the table
+    # rather than sorting to the bottom
+    for b in (1, 4):
+        assert mixed[b].tokens_per_second < plain[b].tokens_per_second
+        assert mixed[b].accuracy_proxy == 0.25
+    assert mixed[4].tokens_per_second > plain[1].tokens_per_second
+    order = [(o.precision, o.batch) for o in report.options]
+    assert order.index(("int4xint8->int32", 4)) < order.index((None, 1))
+    # ...but select() never freezes a what-if mixed cell
+    assert report.select().precision is None
+    assert report.grid["precisions"] == ["int4xint8->int32"]
+    d = mixed[4].as_dict()
+    assert d["precision"] == "int4xint8->int32"
+    assert d["accuracy_proxy"] == 0.25
+
+
+def test_mixed_precision_cells_are_memory_pruned_with_reasons():
+    from repro.configs import get_config
+    from repro.serving.report import REJECT_WEIGHTS, plan_deployment
+
+    cfg = get_config("qwen2-1.5b", smoke=False)
+    tiny = (machines.get("gap9-fc")
+            .with_capacities(M=10 * 2 ** 20, name="gap9-tinymem"))
+    report = plan_deployment(cfg, machines=tiny, dtypes=("int8",),
+                             batches=(1,), backend="analytic-gap8",
+                             precisions=("bf16xint8->int32",))
+    pc_rejects = [r for r in report.rejected
+                  if r.dtype == "bf16xint8->int32"]
+    assert pc_rejects and all(r.reason == REJECT_WEIGHTS
+                              for r in pc_rejects)
+    assert all(r.deficit_bytes > 0 for r in pc_rejects)
+
+
+def test_slo_evaluation_prices_mixed_cells_but_never_deploys_one():
+    """The SLO simulator must price a mixed cell under its PrecisionConfig
+    (its dtype field is the 'AxB->ACC' label, not a plannable dtype) and
+    keep it out of the deployable pool, mirroring report.select()."""
+    from repro.configs import get_config
+    from repro.serving.report import plan_deployment
+    from repro.simulate import evaluate_deployment
+
+    cfg = get_config("qwen2-1.5b", smoke=True)
+    report = plan_deployment(cfg, machines="gap9-fc", dtypes=("int8",),
+                             batches=(1, 2), backend="analytic-gap8",
+                             precisions=("int4xint8->int32",))
+    sel = evaluate_deployment(cfg, report, slo={"p99_latency_s": 30.0},
+                              requests=30)
+    assert sel.option.precision is None
+    simulated = {r["dtype"] for r in sel.results}
+    assert "int4xint8->int32" in simulated      # priced + in the table
+    assert sel.option.dtype == "int8"
+
+
+# ---------------------------------------------------------------------------
+# Calibrator: mixed-key rate fitting
+# ---------------------------------------------------------------------------
+
+
+def _mixed_campaign(n=10):
+    from repro.core.variants import MicroKernel
+
+    shapes = [(32, 96, 64), (64, 48, 128), (96, 96, 96), (48, 160, 32),
+              (128, 64, 64), (80, 80, 200), (40, 72, 88), (56, 120, 48),
+              (104, 40, 152), (72, 88, 72)][:n]
+    probs, mks = [], []
+    for i, sh in enumerate(shapes):
+        p = GemmProblem.coerce(sh, default_dtype="int8")
+        if i % 2:
+            p = p.with_precision("f32xint8->int32")
+        probs.append(p)
+        mks.append(MicroKernel(2 + (i % 3), 2 + ((i + 1) % 3)))
+    return probs * 2, mks * 2
+
+
+def test_calibrator_fits_mixed_rates_from_campaign():
+    from repro.machines.calibrate import Calibrator
+
+    truth = machines.get("gap9-fc")
+    cal = Calibrator("gap9-fc", model="blis", policy="padded")
+    probs, mks = _mixed_campaign()
+    secs = [simulate(truth, cal.variant, mk, p.as_problem(),
+                     policy="padded").total
+            for p, mk in zip(probs, mks)]
+    # the vectorized design matrix equals the scalar oracle exactly
+    A, names = cal.design_matrix(probs, mks)
+    As, names_s = cal.design_matrix_scalar(probs, mks)
+    assert names == names_s
+    np.testing.assert_array_equal(A, As)
+    assert "arith:f32xint8->int32" in names and "arith:int8" in names
+
+    spec, report = cal.fit(probs, secs, date=None, micro_kernels=mks,
+                           name="gap9-refit")
+    assert report.residual_rms_s < 1e-9
+    assert spec.rates_mixed["f32xint8->int32"] == pytest.approx(
+        truth.rates_mixed["f32xint8->int32"], rel=1e-6)
+    assert spec.arith_rate["int8"] == pytest.approx(
+        truth.arith_rate["int8"], rel=1e-6)
+
+
+def test_calibrator_rejects_unsupported_mixed_combinations():
+    from repro.machines.calibrate import Calibrator
+
+    probs, mks = _mixed_campaign(4)
+    cal = Calibrator("gap9-fc", model="blis", policy="padded")
+    with pytest.raises(ValueError, match="per_mk_arith"):
+        cal.design_matrix(probs, mks, per_mk_arith=True)
+    pal = Calibrator("tpu-v5e", model="pallas")
+    mixed_bf16 = [GemmProblem.coerce((64, 128, 64), default_dtype="bf16")
+                  .with_precision("bf16xint8->f32")]
+    with pytest.raises(ValueError, match="blis"):
+        pal.design_matrix(mixed_bf16)

@@ -13,6 +13,7 @@ from repro.runtime.quantized import (
     dequantize_params,
     quantization_error,
     quantize_params,
+    quantized_specs,
 )
 
 
@@ -70,6 +71,86 @@ def test_quantization_per_channel_scales(seed):
     row_max = np.abs(np.asarray(w)).max(axis=1, keepdims=True)
     big = np.abs(np.asarray(w)) > 0.01 * row_max
     assert rel[big].max() < 0.5
+
+
+def test_quantized_specs_mirror_quantize_params_structure():
+    """The sharding-spec tree must have the same treedef as the quantised
+    value tree, or jit donation/sharding silently misaligns: every leaf
+    quantize_params converts must become a QuantizedTensor spec node, and
+    the scale's spec must shard axis 0 with the data (trailing axes are
+    keepdims=1, so replicated)."""
+    from jax.sharding import PartitionSpec as P
+
+    values = {
+        "w": jnp.ones((256, 128), jnp.float32),        # quantised
+        "emb": jnp.ones((512, 64), jnp.bfloat16),      # quantised
+        "norm": jnp.ones((64,), jnp.float32),          # too small / 1-D
+        "q_proj": jnp.ones((8, 64, 64), jnp.float32),  # 3-D, quantised
+        "ids": jnp.ones((256, 128), jnp.int32),        # not floating
+    }
+    specs = {
+        "w": P("data", None),
+        "emb": P(None, "model"),
+        "norm": P(None),
+        "q_proj": P("model", None, None),
+        "ids": P("data", None),
+    }
+    qv = quantize_params(values, min_size=1 << 12)
+    qs = quantized_specs(values, specs)
+    # structural agreement leaf-for-leaf with the value tree
+    assert jax.tree.structure(qv) == jax.tree.structure(
+        qs, is_leaf=lambda x: isinstance(x, P))
+    for name in ("w", "emb", "q_proj"):
+        assert isinstance(qv[name], QuantizedTensor)
+        assert isinstance(qs[name], QuantizedTensor)
+        assert qs[name].q == specs[name]               # data keeps its spec
+    assert qs["w"].scale == P("data", None)
+    assert qs["emb"].scale == P(None, None)            # axis0 spec was None
+    assert qs["q_proj"].scale == P("model", None, None)
+    # passthrough leaves keep their original specs untouched
+    assert qs["norm"] == specs["norm"]
+    assert qs["ids"] == specs["ids"]
+
+
+def test_quantized_specs_threshold_matches_quantize_params_default():
+    """quantized_specs hardcodes the 1<<14 default threshold — a tensor just
+    under it must stay a plain spec while one at it becomes quantised, in
+    lockstep with quantize_params(min_size=1<<14)."""
+    from jax.sharding import PartitionSpec as P
+
+    small = jnp.ones((128, 127), jnp.float32)          # 16256 < 1<<14
+    large = jnp.ones((128, 128), jnp.float32)          # 16384 == 1<<14
+    values = {"small": small, "large": large}
+    specs = {"small": P("x", None), "large": P("x", None)}
+    qv = quantize_params(values)
+    qs = quantized_specs(values, specs)
+    assert not isinstance(qv["small"], QuantizedTensor)
+    assert not isinstance(qs["small"], QuantizedTensor)
+    assert isinstance(qv["large"], QuantizedTensor)
+    assert isinstance(qs["large"], QuantizedTensor)
+
+
+def test_quantized_specs_on_real_model_params():
+    """Every quantised leaf of a real parameter tree gets a QuantizedTensor
+    spec whose scale shape broadcasts against the data."""
+    lm = LM(get_config("qwen2-1.5b", smoke=True), HOST_MESH)
+    values, specs = split_params(lm.init(jax.random.key(0)))
+    qv = quantize_params(values)
+    qs = quantized_specs(values, specs)
+    flat_v = dict(jax.tree_util.tree_leaves_with_path(
+        qv, is_leaf=lambda x: isinstance(x, QuantizedTensor)))
+    flat_s = dict(jax.tree_util.tree_leaves_with_path(
+        qs, is_leaf=lambda x: isinstance(x, QuantizedTensor)))
+    assert set(flat_v) == set(flat_s)
+    n_qt = 0
+    for path, v in flat_v.items():
+        s = flat_s[path]
+        assert isinstance(s, QuantizedTensor) == isinstance(v, QuantizedTensor)
+        if isinstance(v, QuantizedTensor):
+            n_qt += 1
+            assert len(s.scale) == v.q.ndim            # one entry per axis
+            assert all(ax is None for ax in s.scale[1:])
+    assert n_qt > 0
 
 
 def test_calibration_methodology_runs():

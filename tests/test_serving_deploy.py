@@ -201,6 +201,90 @@ def test_weights_rejection_is_distinguished():
 
 
 # ---------------------------------------------------------------------------
+# int8 KV cache: exact scale-vector accounting + batch-capacity effect
+# ---------------------------------------------------------------------------
+
+
+def test_int8_kv_cache_scale_overhead_exact():
+    """The int8 cache's byte accounting, term by term: per attention layer
+    and slot, K+V panels at 1 byte/elem plus two f32 scale vectors
+    (one per position per panel — models/attention.py stores per-position
+    scales next to the quantised panels)."""
+    cfg = get_config(QWEN, smoke=False)
+    max_len = 512
+    fp = footprint(cfg, batch=1, max_len=max_len, dtype="bf16",
+                   kv_dtype="int8")
+    panel = cfg.n_kv_heads * max_len * cfg.head_dim
+    per_layer = 2 * panel * 1 + 2 * cfg.n_kv_heads * max_len * 4
+    assert fp.kv_cache_bytes == cfg.n_layers * per_layer
+    # bf16 cache for comparison: same panels at 2 bytes, no scales
+    fp16 = footprint(cfg, batch=1, max_len=max_len, dtype="bf16")
+    assert fp16.kv_cache_bytes == cfg.n_layers * 2 * panel * 2
+    # the scale vectors cost head_dim/4 : 1 relative to the panel — int8
+    # still roughly halves the cache for any realistic head_dim
+    assert fp.kv_cache_bytes < fp16.kv_cache_bytes
+    assert fp.as_dict()["kv_dtype"] == "int8"
+
+
+def test_quantized_kv_cache_admits_larger_batch():
+    """Budget sits between the bf16-KV and int8-KV footprints of batch 8:
+    the quantised cache admits a batch the bf16 cache rejects, and the
+    bf16 rejection is machine-readable (REJECT_KV_CACHE + deficit)."""
+    cfg = get_config(QWEN, smoke=False)
+    max_len = 1024
+    fp_int8 = footprint(cfg, batch=8, max_len=max_len, dtype="bf16",
+                        kv_dtype="int8")
+    fp_bf16 = footprint(cfg, batch=8, max_len=max_len, dtype="bf16")
+    assert fp_int8.total_bytes < fp_bf16.total_bytes
+    budget = (fp_int8.total_bytes + fp_bf16.total_bytes) // 2
+    spec = (machines.get("tpu-v5e")
+            .with_memory(reserved_fraction=0.0)
+            .with_capacities(M=budget, name="test-kvdtype"))
+    kwargs = dict(machines=spec, dtypes=("bf16",), batches=(1, 8),
+                  max_len=max_len)
+    plain = plan_deployment(cfg, **kwargs)
+    quant = plan_deployment(cfg, kv_dtype="int8", **kwargs)
+    assert plain.select().batch == 1
+    assert {r.batch for r in plain.rejected} == {8}
+    assert all(r.reason == REJECT_KV_CACHE and r.deficit_bytes > 0
+               for r in plain.rejected)
+    # the int8 cache halves the KV bytes: batch 8 now fits and wins
+    assert quant.select().batch == 8
+    assert not quant.rejected
+    assert quant.select().footprint.kv_dtype == "int8"
+
+
+def test_precision_kv_dtype_flows_into_footprint():
+    """A PrecisionConfig's ``@kv=int8`` tag prices its deployment cells
+    with the quantised cache: same bf16 weights and GEMM costs as the base
+    bf16 cell, but the cache bytes drop — so with a budget between the two
+    footprints, only the precision cell survives."""
+    cfg = get_config(QWEN, smoke=False)
+    max_len = 1024
+    fp_kv8 = footprint(cfg, batch=8, max_len=max_len, dtype="bf16",
+                       kv_dtype="int8")
+    fp_kv16 = footprint(cfg, batch=8, max_len=max_len, dtype="bf16")
+    assert fp_kv8.total_bytes < fp_kv16.total_bytes
+    budget = (fp_kv8.total_bytes + fp_kv16.total_bytes) // 2
+    spec = (machines.get("tpu-v5e")
+            .with_memory(reserved_fraction=0.0)
+            .with_capacities(M=budget, name="test-kvprec"))
+    report = plan_deployment(
+        cfg, machines=spec, dtypes=("bf16",), batches=(8,), max_len=max_len,
+        precisions=("bf16xbf16->f32@kv=int8",))
+    # the base bf16 cell's bf16 cache blows the budget ...
+    assert [r.dtype for r in report.rejected] == ["bf16"]
+    assert report.rejected[0].reason == REJECT_KV_CACHE
+    # ... while the @kv=int8 what-if (identical weights + GEMM plan) fits
+    assert len(report.options) == 1
+    opt = report.options[0]
+    assert opt.precision == "bf16xbf16->f32"   # key() carries the GEMM part
+    assert opt.footprint.kv_dtype == "int8"
+    assert opt.footprint.total_bytes == fp_kv8.total_bytes
+    assert opt.batch == 8 and opt.headroom_bytes >= 0
+
+
+# ---------------------------------------------------------------------------
 # Zoo-wide ranking
 # ---------------------------------------------------------------------------
 
